@@ -1,0 +1,73 @@
+"""Fig. 17: end-to-end TTFT/TBT — BlitzScale vs ServerlessLLM vs AllCache
+across the three real-world-shaped traces.
+
+Paper headline: 47-75% shorter mean TTFT vs S-LLM, up to 94% shorter tail
+TBT; AllCache sits between (fast loads, but still stop-the-world)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import calibrated_trace, markdown_table, write_csv, write_json
+from repro.core import simulator as sim
+
+import dataclasses
+
+# The compressed 150 s traces stand in for the paper's multi-hour ones, so
+# S-LLM's 5-minute keepalive is compressed proportionally (60 s): azure_code's
+# inter-burst gap then evicts the cache exactly as in the paper's §6.1.
+SYSTEMS = {
+    "blitz": sim.BLITZ,
+    "sllm": dataclasses.replace(sim.SLLM, keepalive_s=60.0),
+    "allcache": sim.ALLCACHE,
+}
+# paper's trace->model pairing (§6.1: one trace per model per cluster)
+PAIRS = [("burstgpt", "8b"), ("azure_code", "24b"), ("azure_conv", "24b")]
+
+
+def run(duration=150.0):
+    rows = []
+    cdfs = {}
+    for trace_name, size in PAIRS:
+        prof = sim.profile_for(size)
+        tr = calibrated_trace(trace_name, prof, duration=duration, seed=2)
+        for name, cfg in SYSTEMS.items():
+            r = sim.run_system(cfg, prof, tr)
+            ttfts, tbts = r.ttfts(), r.tbts()
+            rows.append([
+                trace_name, size, name,
+                round(float(np.mean(ttfts)), 4), round(float(np.percentile(ttfts, 99)), 4),
+                round(float(np.mean(tbts)), 5), round(float(np.percentile(tbts, 99)), 5),
+                round(r.slo_attainment(prof), 4),
+            ])
+            cdfs[f"{trace_name}/{name}"] = {
+                "ttft_p": np.percentile(ttfts, [50, 90, 95, 99, 99.9]).tolist(),
+                "tbt_p": np.percentile(tbts, [50, 90, 95, 99, 99.9]).tolist(),
+            }
+    return rows, cdfs
+
+
+def main():
+    rows, cdfs = run()
+    write_csv("fig17_e2e_traces.csv",
+              ["trace", "model", "system", "mean_ttft", "p99_ttft",
+               "mean_tbt", "p99_tbt", "slo_attainment"], rows)
+    write_json("fig17_cdfs.json", cdfs)
+    print(markdown_table(
+        ["trace", "model", "system", "mean TTFT", "p99 TTFT", "mean TBT",
+         "p99 TBT", "SLO"], rows))
+    # headline: blitz has the lowest mean TTFT on every trace (ties allowed
+    # on azure_conv where S-LLM always cache-hits — paper §6.1)
+    for trace_name, _ in PAIRS:
+        sub = {r[2]: r[3] for r in rows if r[0] == trace_name}
+        assert sub["blitz"] <= sub["sllm"] * 1.05, (trace_name, sub)
+        assert sub["blitz"] <= sub["allcache"] * 1.05, (trace_name, sub)
+    # and strictly beats S-LLM on the isolated-burst traces
+    for trace_name in ("burstgpt", "azure_code"):
+        sub = {r[2]: r[3] for r in rows if r[0] == trace_name}
+        assert sub["blitz"] < sub["sllm"], (trace_name, sub)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Fig. 19: host cache usage — O(1) (BlitzScale) vs O(hosts) (S-LLM TTL).
+
+The global parameter pool keeps exactly one host copy per model; S-LLM's
+keepalive cache replicates each model onto every host that ever scaled it."""
+
+from __future__ import annotations
+
+from benchmarks.common import calibrated_trace, markdown_table, write_csv
+from repro.core import simulator as sim
+from repro.core.parameter_pool import ParameterPool
+from repro.core import topology as tp
+
+
+def run(duration=150.0):
+    rows = []
+    for trace_name, size in [("burstgpt", "8b"), ("azure_code", "24b"), ("azure_conv", "24b")]:
+        prof = sim.profile_for(size)
+        tr = calibrated_trace(trace_name, prof, duration=duration, seed=4)
+        for name, cfg in [("blitz", sim.BLITZ), ("sllm", sim.SLLM)]:
+            r = sim.run_system(cfg, prof, tr)
+            rows.append([
+                trace_name, name,
+                round(r.host_cache_total() / prof.param_bytes, 3),  # in model-copies
+                r.scale_events,
+            ])
+    return rows
+
+
+def multi_model_pool_growth(n_models=64, n_hosts=16):
+    """The MAAS-wide view: pool usage grows O(models), one copy each, spread
+    evenly — aggregated host DRAM suffices for ALL models (paper §1)."""
+    topo = tp.make_cluster(n_hosts, 8)
+    pool = ParameterPool(topo)
+    for i in range(n_models):
+        pool.register(f"model-{i}", 16 << 30)
+    usage = pool.host_cache_bytes()
+    per_host_copies = [v / (16 << 30) for v in usage.values()]
+    return max(per_host_copies), n_models / n_hosts
+
+
+def main():
+    rows = run()
+    write_csv("fig19_cache_usage.csv",
+              ["trace", "system", "host_cache_model_copies", "scale_events"], rows)
+    print(markdown_table(["trace", "system", "cache (model-copies)", "scales"], rows))
+    for trace_name in {r[0] for r in rows}:
+        sub = {r[1]: r[2] for r in rows if r[0] == trace_name}
+        assert sub["blitz"] <= 1.0 + 1e-9  # O(1)
+        assert sub["sllm"] >= sub["blitz"]
+    mx, ideal = multi_model_pool_growth()
+    print(f"\n64 models on 16 hosts: max copies/host = {mx} (ideal {ideal})")
+    assert mx <= ideal + 1
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Fig. 20: ablation — +Network, +Multicast(fast), +ZigZag(live).
+
+Each step enables one BlitzScale technique on top of the previous:
+  ssd            : SSD-only loading (the S-LLM-miss path)
+  +network       : compute-network unicast, interference-ignorant
+  +multicast     : Algorithm-11 interference-free multi-chain plan
+  +zigzag (live) : live cooperative execution during loading
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import calibrated_trace, markdown_table, write_csv
+from repro.core import simulator as sim
+
+STEPS = [
+    ("ssd", sim.SSD_ONLY),
+    ("+network", sim.BLITZ_NAIVE),
+    ("+multicast", sim.BLITZ_NOLIVE),
+    ("+zigzag(live)", sim.BLITZ),
+]
+
+
+def run(duration=150.0):
+    rows = []
+    for trace_name, size in [("burstgpt", "8b"), ("azure_code", "24b"), ("azure_conv", "24b")]:
+        prof = sim.profile_for(size)
+        tr = calibrated_trace(trace_name, prof, duration=duration, seed=5)
+        for name, cfg in STEPS:
+            r = sim.run_system(cfg, prof, tr)
+            rows.append([
+                trace_name, name,
+                round(r.mean_ttft(), 4), round(r.p99_ttft(), 4),
+                round(r.p99_tbt(), 5), round(r.slo_attainment(prof), 4),
+                round(sum(r.scale_seconds) / max(len(r.scale_seconds), 1), 3),
+            ])
+    return rows
+
+
+def main():
+    rows = run()
+    write_csv("fig20_ablation.csv",
+              ["trace", "step", "mean_ttft", "p99_ttft", "p99_tbt",
+               "slo_attainment", "mean_scale_s"], rows)
+    print(markdown_table(
+        ["trace", "step", "mean TTFT", "p99 TTFT", "p99 TBT", "SLO", "scale(s)"],
+        rows))
+    # each increment should not regress mean TTFT (aggregate over traces)
+    for trace_name in {r[0] for r in rows}:
+        sub = [r for r in rows if r[0] == trace_name]
+        assert sub[0][2] >= sub[-1][2], sub  # full blitz beats ssd
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Fig. 3 (a-d): SLO attainment vs autoscaling-stop duration.
+
+Reproduces the paper's characterization: a simulator provisions instances and
+applies a manual scaling delay; SLO attainment degrades as the delay grows.
+The paper's anchor points: SSD (12.8 s for 8B @10 Gbps) is unusable; host
+cache (~0.5-1 s) marginal; network multicast (~0.15-0.6 s) holds SLO.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import calibrated_trace, markdown_table, write_csv
+from repro.core import simulator as sim
+
+
+DELAYS = [0.05, 0.15, 0.5, 1.0, 2.0, 5.0, 12.8]
+MODELS = ["8b", "24b", "72b"]
+
+
+def run(duration=150.0):
+    rows = []
+    for size in MODELS:
+        prof = sim.profile_for(size)
+        tr = calibrated_trace("burstgpt", prof, duration=duration, seed=1)
+        for d in DELAYS:
+            r = sim.run_system(sim.delay_system(d), prof, tr)
+            rows.append([size, d, round(r.slo_attainment(prof), 4),
+                         round(r.mean_ttft(), 4), round(r.p99_ttft(), 4)])
+    return rows
+
+
+def main():
+    rows = run()
+    write_csv("fig3_slo_vs_speed.csv",
+              ["model", "scale_stop_s", "slo_attainment", "mean_ttft_s", "p99_ttft_s"],
+              rows)
+    print(markdown_table(
+        ["model", "stop(s)", "SLO att.", "mean TTFT", "p99 TTFT"], rows))
+    # headline check: longer stops monotonically hurt attainment per model
+    for size in MODELS:
+        att = [r[2] for r in rows if r[0] == size]
+        assert att[0] >= att[-1], (size, att)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

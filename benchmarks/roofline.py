@@ -1,0 +1,86 @@
+"""§Roofline table generator: reads the dry-run JSONs and emits the
+per-(arch x shape x mesh) three-term roofline analysis (deliverable g).
+
+    PYTHONPATH=src python -m benchmarks.roofline [--mesh single]
+
+Terms (seconds/step/chip, TPU v5e):
+  compute    = loop-corrected dot FLOPs / 197 TFLOP/s
+  memory     = loop-corrected HBM-traffic proxy / 819 GB/s
+  collective = collective operand bytes / 50 GB/s per link
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from benchmarks.common import markdown_table, result_path, write_csv
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def load_records(mesh: str = "single") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def _suggestion(rec: dict) -> str:
+    """One sentence on what would move the dominant term down."""
+    b = rec["bottleneck"]
+    shape = rec["shape"]
+    coll = rec.get("coll_by_op", {})
+    if b == "collective":
+        top = max(coll, key=coll.get) if coll else "?"
+        return f"dominant {top}: overlap/reshard (seq-parallel or EP a2a fusion)"
+    if b == "memory":
+        if shape in ("prefill_32k", "train_4k"):
+            return "fuse attention score traffic into VMEM (Pallas flash kernel)"
+        return "KV-cache read is the floor; shrink via head-sharding/quantized KV"
+    return "compute-bound: raise MXU utilization (larger microbatch tiles)"
+
+
+def table(recs: list[dict]) -> tuple[list[str], list[list]]:
+    header = ["arch", "shape", "mesh", "t_comp(ms)", "t_mem(ms)", "t_coll(ms)",
+              "bottleneck", "useful_flops", "args/dev(GiB)", "suggestion"]
+    rows = []
+    for r in recs:
+        if not r.get("ok"):
+            rows.append([r["arch"], r["shape"], r["mesh"], "-", "-", "-",
+                         "FAILED", "-", "-", r.get("error", "")[:40]])
+            continue
+        rows.append([
+            r["arch"], r["shape"], r["mesh"],
+            round(r["t_compute"] * 1e3, 2),
+            round(r["t_memory"] * 1e3, 2),
+            round(r["t_collective"] * 1e3, 2),
+            r["bottleneck"],
+            round(r["useful_flop_frac"], 3),
+            round(r["argument_size_in_bytes"] / 2**30, 2),
+            _suggestion(r),
+        ])
+    return header, rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    args = ap.parse_args()
+    recs = load_records(args.mesh)
+    if not recs:
+        print(f"no dry-run records under {DRYRUN_DIR}; run "
+              "`python -m repro.launch.dryrun` first")
+        return
+    header, rows = table(recs)
+    write_csv(f"roofline_{args.mesh}.csv", header, rows)
+    print(markdown_table(header, rows))
+    n_ok = sum(1 for r in recs if r.get("ok"))
+    print(f"\n{n_ok}/{len(recs)} cells ok on mesh={args.mesh}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Benchmark orchestrator: one entry per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig17]
+
+Each module prints a markdown table, writes CSV/JSON under
+benchmarks/results/, and asserts its paper-headline property."""
+
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+SUITES = [
+    ("fig3_slo_vs_speed", "Fig.3 SLO attainment vs scaling-stop duration"),
+    ("fig17_e2e_traces", "Fig.17 TTFT/TBT: blitz vs S-LLM vs AllCache"),
+    ("fig18_gpu_time", "Fig.18 GPU time vs DistServe full/half"),
+    ("fig19_cache_usage", "Fig.19 O(1) host cache vs S-LLM"),
+    ("fig20_ablation", "Fig.20 +Network/+Multicast/+ZigZag ablation"),
+    ("fig21_live_timeline", "Fig.21 live-scale throughput timeline"),
+    ("plan_generation", "§5.1/5.2 plan-gen + ZigZag solver latency"),
+    ("kernel_micro", "App.A kernel micro (Pallas vs oracle)"),
+    ("roofline", "§Roofline table from dry-run artifacts"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="run a single suite by name")
+    args = ap.parse_args()
+
+    failures = []
+    for name, desc in SUITES:
+        if args.only and args.only not in name:
+            continue
+        print(f"\n{'='*78}\n== {name}: {desc}\n{'='*78}", flush=True)
+        t0 = time.perf_counter()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            mod.main()
+            print(f"-- {name} ok in {time.perf_counter()-t0:.1f}s", flush=True)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+            print(f"-- {name} FAILED", flush=True)
+
+    print(f"\n{'='*78}")
+    if failures:
+        print(f"{len(failures)} suite(s) failed: {failures}")
+        raise SystemExit(1)
+    print("all benchmark suites passed")
+
+
+if __name__ == "__main__":
+    main()

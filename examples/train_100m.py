@@ -1,0 +1,74 @@
+"""End-to-end driver: train a ~100M-parameter granite-family model for a few
+hundred steps on the synthetic pipeline, with checkpoints (deliverable b).
+
+    PYTHONPATH=src python examples/train_100m.py [--steps 300]
+
+Uses the same code path as the production launcher (repro.launch.train):
+AdamW + cosine schedule, grad accumulation, remat scan, atomic checkpoints.
+On CPU this takes a few minutes at the default 300 steps; loss drops from
+~8.5 to well below the unigram entropy of the synthetic stream.
+"""
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import make_batch
+from repro.models import transformer as TF
+from repro.training.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.training.optimizer import AdamWConfig, adamw_init
+from repro.training.train_step import build_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default="/tmp/blitz_train_100m")
+    args = ap.parse_args()
+
+    # ~100M params: a scaled-down granite (8 layers, d=768, ff=2048)
+    cfg = get_config("granite-8b").replace(
+        name="granite-100m", n_layers=8, d_model=768, n_heads=12, n_kv_heads=4,
+        d_ff=2048, vocab_size=32_000, microbatches=1, remat=True,
+        sharding_overrides=None,
+    )
+    opt_cfg = AdamWConfig(lr=6e-4, warmup_steps=30, total_steps=args.steps)
+    params = TF.init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw_init(params, opt_cfg)
+    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"{cfg.name}: {n/1e6:.1f}M params, batch {args.batch} x seq {args.seq}")
+
+    start = 0
+    if latest_step(args.ckpt) is not None:
+        state, start = restore_checkpoint(args.ckpt, {"params": params, "opt": opt})
+        params, opt = state["params"], state["opt"]
+        print(f"resumed from step {start}")
+
+    step_fn = jax.jit(build_train_step(cfg, opt_cfg), donate_argnums=(0, 1))
+    t0, first_loss = time.perf_counter(), None
+    for step in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in make_batch(cfg, args.batch, args.seq, step=step).items()}
+        params, opt, m = step_fn(params, opt, batch)
+        if step % 20 == 0 or step == args.steps - 1:
+            loss = float(m["loss"])
+            first_loss = first_loss if first_loss is not None else loss
+            tok_s = (step - start + 1) * args.batch * args.seq / (time.perf_counter() - t0)
+            print(f"step {step:4d}  loss {loss:.4f}  lr {float(m['lr']):.2e}  tok/s {tok_s:,.0f}")
+        if (step + 1) % 100 == 0:
+            path = save_checkpoint(args.ckpt, step + 1, {"params": params, "opt": opt})
+            print(f"  checkpoint -> {path}")
+
+    print(f"\nloss {first_loss:.3f} -> {float(m['loss']):.3f} over {args.steps - start} steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""BlitzScale core: the paper's contribution as composable JAX + host modules.
+
+  topology        — scale-up/scale-out cluster model (Fig. 10)
+  parameter_pool  — global O(1)-cached parameter manager (§5.3)
+  multicast       — Algorithm 11 interference-free multi-chain planner (§5.1)
+  zigzag          — live-scaling pipeline ILP + ILP-free scheduler (§5.2)
+  live_scaling    — cooperative execution protocol + jittable split forward
+  autoscaler      — load monitor + bound policy + decode pre-scaling (§5.3-4)
+  collectives     — TPU data plane: pipelined ppermute chain broadcast
+  simulator       — discrete-event MAAS evaluation harness (Fig. 3 method)
+"""
+
+from repro.core.autoscaler import Autoscaler, PolicyConfig
+from repro.core.live_scaling import LiveSession, cooperative_forward
+from repro.core.multicast import MulticastPlan, plan_multicast, validate_plan
+from repro.core.parameter_pool import ParameterPool
+from repro.core.topology import Role, Topology, make_cluster
+from repro.core.zigzag import (
+    simulate_best_effort,
+    simulate_zigzag,
+    solve_pipeline_ilp,
+)
+
+__all__ = [
+    "Autoscaler",
+    "PolicyConfig",
+    "LiveSession",
+    "cooperative_forward",
+    "MulticastPlan",
+    "plan_multicast",
+    "validate_plan",
+    "ParameterPool",
+    "Role",
+    "Topology",
+    "make_cluster",
+    "simulate_best_effort",
+    "simulate_zigzag",
+    "solve_pipeline_ilp",
+]

@@ -1,0 +1,115 @@
+"""Global parameter pool — O(1) host caching (paper §5.3).
+
+Tracks, for every model served by the MAAS, where its parameters live:
+
+  * GPU copies — devices behind deployed serving instances (preferred
+    multicast sources: reading from them needs *zero* host cache), and
+  * exactly ONE host-DRAM copy cluster-wide (the O(1) invariant), placed
+    evenly across hosts at registration so the aggregated host memory of the
+    cluster suffices for *all* models (vs. ServerlessLLM caching each model
+    on every host it ever touched).
+
+Fault tolerance (paper App. A.1): when a host fails, models whose single
+cached copy lived there are re-replicated from any surviving GPU copy (or,
+if none, flagged for re-upload from blob storage); the invariant
+``copies(model) >= 1`` is restored before the failure handler returns.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Iterable
+
+from repro.core.topology import Device, Role, Topology
+
+
+@dataclasses.dataclass
+class ModelRecord:
+    name: str
+    size_bytes: int
+    host_copy: int | None  # host id of the single cached copy (None = lost!)
+    gpu_devices: set[int] = dataclasses.field(default_factory=set)
+
+
+class ParameterPool:
+    """Centralized manager mapping model -> parameter locations."""
+
+    def __init__(self, topo: Topology):
+        self.topo = topo
+        self.models: dict[str, ModelRecord] = {}
+        self._rr = itertools.count()  # round-robin host placement
+        self._hosts = sorted({d.host for d in topo.devices})
+        self._failed_hosts: set[int] = set()
+
+    # -- registration -------------------------------------------------------
+    def register(self, name: str, size_bytes: int) -> None:
+        """Distribute the single host copy evenly across hosts (§5.3)."""
+        if name in self.models:
+            return
+        alive = [h for h in self._hosts if h not in self._failed_hosts]
+        host = alive[next(self._rr) % len(alive)]
+        self.models[name] = ModelRecord(name, size_bytes, host_copy=host)
+
+    # -- deployment tracking --------------------------------------------------
+    def deploy(self, name: str, device_ids: Iterable[int]) -> None:
+        rec = self.models[name]
+        for i in device_ids:
+            rec.gpu_devices.add(i)
+            self.topo.device(i).model = name
+
+    def reclaim(self, name: str, device_ids: Iterable[int]) -> None:
+        rec = self.models[name]
+        for i in device_ids:
+            rec.gpu_devices.discard(i)
+            d = self.topo.device(i)
+            if d.model == name:
+                d.model = None
+                d.role = Role.FREE
+
+    # -- source query (consulted by the scale planner, Fig. 6 step 3) --------
+    def sources(self, name: str) -> tuple[list[int], int | None]:
+        """Returns (gpu_device_ids, host_id_of_cached_copy)."""
+        rec = self.models[name]
+        live = {i for i in rec.gpu_devices if self.topo.device(i).host not in self._failed_hosts}
+        host = rec.host_copy if rec.host_copy not in self._failed_hosts else None
+        return sorted(live), host
+
+    def n_copies(self, name: str) -> int:
+        gpus, host = self.sources(name)
+        return len(gpus) + (1 if host is not None else 0)
+
+    # -- O(1) metric (paper Fig. 19) -----------------------------------------
+    def host_cache_bytes(self) -> dict[int, int]:
+        """Bytes of parameter cache held per host — the paper's Fig. 19
+        metric.  By construction each model contributes to exactly one host."""
+        usage: dict[int, int] = {h: 0 for h in self._hosts}
+        for rec in self.models.values():
+            if rec.host_copy is not None and rec.host_copy not in self._failed_hosts:
+                usage[rec.host_copy] += rec.size_bytes
+        return usage
+
+    # -- fault tolerance -------------------------------------------------------
+    def fail_host(self, host: int) -> list[str]:
+        """Mark a host failed; restore the >=1-copy invariant for every model
+        whose cached copy it held.  Returns models that had to be re-homed."""
+        self._failed_hosts.add(host)
+        rehomed = []
+        alive = [h for h in self._hosts if h not in self._failed_hosts]
+        for rec in self.models.values():
+            rec.gpu_devices = {
+                i for i in rec.gpu_devices if self.topo.device(i).host != host
+            }
+            if rec.host_copy == host:
+                # re-replicate from a surviving GPU copy if any, else re-home
+                # (in the real system the bytes move over the compute network
+                # — the same multicast data plane; here we track placement)
+                rec.host_copy = alive[next(self._rr) % len(alive)] if alive else None
+                rehomed.append(rec.name)
+        return rehomed
+
+    def recover_host(self, host: int) -> None:
+        self._failed_hosts.discard(host)
+
+    def invariant_ok(self) -> bool:
+        return all(self.n_copies(m) >= 1 for m in self.models)

@@ -1,0 +1,645 @@
+"""Discrete-event MAAS cluster simulator (the paper's Fig. 3 methodology).
+
+Reproduces the paper's evaluation: real-world-shaped traces are served by a
+cluster of instances whose autoscaling *data plane* is modelled per system:
+
+  ==============  =========================================================
+  system          data plane on scale-up
+  ==============  =========================================================
+  blitz           Algorithm-11 multicast over the compute network (+ live
+                  ZigZag cooperative execution: the overloaded source
+                  instance's throughput ramps with the target's loaded
+                  layers, reaching 2x at L/2)
+  blitz-nolive    same network multicast, stop-the-world
+  blitz-naive     compute network, but serialized unicast from the single
+                  host copy, interference-ignorant ("+Network" ablation)
+  sllm            ServerlessLLM: host-cache hit -> PCIe; miss -> SSD; TTL
+                  keepalive makes its host cache O(#hosts touched) (Fig.19)
+  allcache        ServerlessLLM-optimal: always PCIe from host cache
+  fixed           DistServe/vLLM-style: no autoscaling (full / half
+                  provisioning)
+  ==============  =========================================================
+
+Timing model (per instance): prefill is compute-bound
+(``tokens / prefill_tps``), decode is memory-bound (weight pass + per-seq
+KV read per round); decode pre-scaling (§5.4) applies to every autoscaling
+system, as in the paper.  All timing constants derive from the paper's
+A800 cluster (Table 1) so Fig. 3/17 magnitudes are comparable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from collections import defaultdict, deque
+from typing import Callable, Iterable
+
+import numpy as np
+
+from repro.core import multicast as mc
+from repro.core import topology as topo_mod
+from repro.core.autoscaler import Autoscaler, LoadSample, PolicyConfig
+from repro.core.live_scaling import LiveSession
+from repro.core.parameter_pool import ParameterPool
+from repro.core.topology import Role, Topology, gbps_to_bytes_per_s
+
+# ---------------------------------------------------------------------------
+# Model serving profile
+# ---------------------------------------------------------------------------
+
+A800_TFLOPS = 312e12 * 0.45  # effective prefill FLOP/s per GPU (MFU ~0.45)
+A800_HBM = 1.6e12  # effective HBM bytes/s per GPU
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelProfile:
+    name: str
+    param_bytes: int
+    n_layers: int
+    devices_per_instance: int
+    kv_bytes_per_token: int
+    ttft_slo_s: float
+    tbt_slo_s: float
+
+    @property
+    def prefill_tps(self) -> float:
+        """Compute-bound: 2*N FLOPs/token over the instance's GPUs."""
+        flops_per_tok = 2.0 * (self.param_bytes / 2)  # bf16 -> N params
+        return A800_TFLOPS * self.devices_per_instance / flops_per_tok
+
+    @property
+    def weight_pass_s(self) -> float:
+        """One decode round reads all weights once (per GPU shard)."""
+        return (self.param_bytes / self.devices_per_instance) / A800_HBM
+
+    def kv_read_s(self, ctx_tokens: float) -> float:
+        return ctx_tokens * self.kv_bytes_per_token / (A800_HBM * self.devices_per_instance)
+
+    @property
+    def kv_capacity_tokens(self) -> int:
+        """KV room per instance: 80 GB/GPU minus weights."""
+        free = 80e9 * self.devices_per_instance - self.param_bytes * 1.2
+        return max(int(free / self.kv_bytes_per_token), 1)
+
+
+def profile_for(size: str) -> ModelProfile:
+    """The paper's three evaluation models (§6: SLOs follow DistServe)."""
+    if size == "8b":
+        return ModelProfile("llama3-8b", 16_000_000_000, 32, 1,
+                            2 * 32 * 8 * 128 * 2, 0.45, 0.15)
+    if size == "24b":
+        return ModelProfile("mistral-24b", 48_000_000_000, 40, 2,
+                            2 * 40 * 8 * 128 * 2, 0.80, 0.175)
+    if size == "72b":
+        return ModelProfile("qwen2.5-72b", 144_000_000_000, 80, 4,
+                            2 * 80 * 8 * 128 * 2, 1.25, 0.20)
+    raise ValueError(size)
+
+
+# ---------------------------------------------------------------------------
+# Requests and instances
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    arrival: float
+    prompt: int
+    output: int
+    prefill_done: float | None = None
+    token_times: list[float] = dataclasses.field(default_factory=list)
+    decoded: int = 0
+
+    @property
+    def ttft(self) -> float | None:
+        return None if self.prefill_done is None else self.prefill_done - self.arrival
+
+    def tbts(self) -> list[float]:
+        ts = [self.prefill_done] + self.token_times if self.prefill_done else self.token_times
+        return [b - a for a, b in zip(ts, ts[1:])]
+
+
+@dataclasses.dataclass
+class Instance:
+    iid: int
+    phase: str  # 'prefill' | 'decode'
+    device_ids: tuple[int, ...]
+    active_from: float  # when it can serve at full capacity
+    # live scaling: a session attached to the *source* (overloaded) instance;
+    # its throughput multiplier ramps 1 -> 2 as the paired target loads layers
+    live_boost: LiveSession | None = None
+    queue: deque = dataclasses.field(default_factory=deque)
+    busy_until: float = 0.0
+    active_reqs: dict = dataclasses.field(default_factory=dict)  # rid -> Request
+    kv_tokens: int = 0
+    retired: bool = False
+
+    def boost(self, now: float) -> float:
+        if self.live_boost is None:
+            return 1.0
+        if now >= self.live_boost.done_at():
+            self.live_boost = None
+            return 1.0
+        return self.live_boost.throughput_multiplier(now)
+
+
+# ---------------------------------------------------------------------------
+# System policy descriptors
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemConfig:
+    name: str
+    data_plane: str  # 'ssd'|'hostcache'|'network_naive'|'network_multicast'|'fixed'|'delay'
+    live: bool = False
+    autoscale: bool = True
+    keepalive_s: float = 300.0  # S-LLM 5-minute TTL
+    fixed_prefill: int = 0
+    fixed_decode: int = 0
+    fixed_delay_s: float = 0.0  # for the Fig. 3 scaling-stop sweep
+    allow_interference: bool = False
+    control_plane_s: float = 0.05  # CUDA-context-pool / pre-lowered exec (§A.1)
+    prewarm: bool = False  # AllCache: parameters start cached on every host
+
+
+BLITZ = SystemConfig("blitz", "network_multicast", live=True)
+BLITZ_NOLIVE = SystemConfig("blitz-nolive", "network_multicast", live=False)
+BLITZ_NAIVE = SystemConfig("blitz-naive", "network_naive", live=False,
+                           allow_interference=True)
+SLLM = SystemConfig("sllm", "hostcache", live=False)
+ALLCACHE = SystemConfig("allcache", "hostcache", live=False, keepalive_s=1e18,
+                        prewarm=True)
+SSD_ONLY = SystemConfig("ssd", "ssd", live=False)
+
+
+def fixed_system(name: str, n_prefill: int, n_decode: int) -> SystemConfig:
+    return SystemConfig(name, "fixed", autoscale=False,
+                        fixed_prefill=n_prefill, fixed_decode=n_decode)
+
+
+def delay_system(delay_s: float) -> SystemConfig:
+    """Fig. 3 methodology: a manual scaling stop duration."""
+    return SystemConfig(f"delay-{delay_s:g}s", "delay", fixed_delay_s=delay_s)
+
+
+# ---------------------------------------------------------------------------
+# Result metrics
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SimResult:
+    system: str
+    requests: list[Request]
+    gpu_time_s: float  # integral of (active devices) dt
+    host_cache_peak_bytes: dict[int, int]  # per host
+    scale_events: int
+    scale_seconds: list[float]  # data-plane durations
+    net_scale_bytes: float  # bytes moved over compute network for scaling
+    timeline: list[tuple[float, int, int]]  # (t, n_prefill, n_decode)
+
+    def ttfts(self) -> np.ndarray:
+        return np.array([r.ttft for r in self.requests if r.ttft is not None])
+
+    def tbts(self) -> np.ndarray:
+        out = []
+        for r in self.requests:
+            out.extend(r.tbts())
+        return np.array(out) if out else np.array([0.0])
+
+    def slo_attainment(self, prof: ModelProfile) -> float:
+        ok = 0
+        n = 0
+        for r in self.requests:
+            if r.ttft is None:
+                n += 1
+                continue
+            n += 1
+            good = r.ttft <= prof.ttft_slo_s
+            if good and r.tbts():
+                good = float(np.percentile(r.tbts(), 99)) <= prof.tbt_slo_s
+            ok += bool(good)
+        return ok / max(n, 1)
+
+    def p99_ttft(self) -> float:
+        t = self.ttfts()
+        return float(np.percentile(t, 99)) if len(t) else float("inf")
+
+    def mean_ttft(self) -> float:
+        t = self.ttfts()
+        return float(np.mean(t)) if len(t) else float("inf")
+
+    def p99_tbt(self) -> float:
+        return float(np.percentile(self.tbts(), 99))
+
+    def mean_tbt(self) -> float:
+        return float(np.mean(self.tbts()))
+
+    def host_cache_total(self) -> float:
+        return float(sum(self.host_cache_peak_bytes.values()))
+
+
+# ---------------------------------------------------------------------------
+# The simulator
+# ---------------------------------------------------------------------------
+
+
+class Simulator:
+    def __init__(
+        self,
+        system: SystemConfig,
+        prof: ModelProfile,
+        *,
+        n_hosts: int = 4,
+        devs_per_host: int = 8,
+        net_gbps: float = 100.0,
+        nvlink: bool = True,
+        pcie_gbps: float = 256.0,
+        ssd_gbps: float = 10.0,
+        monitor_dt: float = 0.1,
+        seed: int = 0,
+    ):
+        self.sys = system
+        self.prof = prof
+        self.net_gbps = net_gbps
+        self.pcie_gbps = pcie_gbps
+        self.ssd_gbps = ssd_gbps
+        self.monitor_dt = monitor_dt
+        self.topo = topo_mod.make_cluster(
+            n_hosts, devs_per_host, bw_gbps=net_gbps,
+            scaleup_per_host=nvlink,
+        )
+        self.pool = ParameterPool(self.topo)
+        self.pool.register(prof.name, prof.param_bytes)
+        self.rng = np.random.default_rng(seed)
+
+        self.instances: dict[int, Instance] = {}
+        self._iid = 0
+        self.now = 0.0
+        self.events: list[tuple[float, int, str, object]] = []
+        self._eid = 0
+        self.done: set[int] = set()
+        self.waiting_decode: deque[Request] = deque()
+        # S-LLM style host cache tracking: host -> model -> last_used
+        self.host_cache: dict[int, dict[str, float]] = defaultdict(dict)
+        self.host_cache_peak: dict[int, int] = defaultdict(int)
+        self.scale_seconds: list[float] = []
+        self.net_scale_bytes = 0.0
+        self.scale_events = 0
+        self.gpu_time = 0.0
+        self._last_gpu_t = 0.0
+        self.timeline: list[tuple[float, int, int]] = []
+        self._naive_src_free = 0.0  # serialized unicast source availability
+
+        cap_tps = self.prof.prefill_tps
+        dec_tps = 32.0 / (self.prof.weight_pass_s + 32 * self.prof.kv_read_s(1024))
+        self.scaler = Autoscaler(
+            PolicyConfig(max_instances=len(self.topo.devices) // prof.devices_per_instance),
+            prefill_capacity_tps=cap_tps * 0.9,
+            decode_capacity_tps=dec_tps,
+        )
+        self._reqs: dict[int, Request] = {}
+
+    # -- event machinery ----------------------------------------------------
+    def push(self, t: float, kind: str, payload: object = None) -> None:
+        self._eid += 1
+        heapq.heappush(self.events, (t, self._eid, kind, payload))
+
+    # -- instance management --------------------------------------------------
+    def _alloc_devices(self, n_devs: int) -> list[int] | None:
+        spares = self.topo.spares()
+        by_su = self.topo.scaleup_groups([d.id for d in spares])
+        ids: list[int] = []
+        for su, members in sorted(by_su.items(), key=lambda kv: -len(kv[1])):
+            for m in members:
+                if len(ids) < n_devs:
+                    ids.append(m)
+        return ids if len(ids) == n_devs else None
+
+    def _activate_instance(self, phase: str, dev_ids: list[int],
+                           active_from: float) -> Instance:
+        inst = Instance(self._iid, phase, tuple(dev_ids), active_from,
+                        busy_until=active_from)
+        self._iid += 1
+        self.instances[inst.iid] = inst
+        for i in dev_ids:
+            d = self.topo.device(i)
+            d.role = Role.PREFILL if phase == "prefill" else Role.DECODE
+            d.model = self.prof.name
+        self.pool.deploy(self.prof.name, dev_ids)
+        return inst
+
+    def _retire_instance(self, inst: Instance) -> None:
+        inst.retired = True
+        self.pool.reclaim(self.prof.name, inst.device_ids)
+        self.instances.pop(inst.iid, None)
+
+    def _live_instances(self, phase: str) -> list[Instance]:
+        return [i for i in self.instances.values() if i.phase == phase and not i.retired]
+
+    def _active_instances(self, phase: str) -> list[Instance]:
+        return [i for i in self._live_instances(phase) if self.now >= i.active_from]
+
+    # -- data plane models -----------------------------------------------------
+    def _delay_simple(self, dev_ids: list[int]) -> float:
+        """Data-plane seconds for one instance on ssd/hostcache/delay planes."""
+        s = self.sys
+        pb = self.prof.param_bytes
+        per_dev = pb / self.prof.devices_per_instance
+        if s.data_plane == "delay":
+            return s.fixed_delay_s
+        if s.data_plane == "ssd":
+            return per_dev / gbps_to_bytes_per_s(self.ssd_gbps)
+        if s.data_plane == "hostcache":
+            host = self.topo.device(dev_ids[0]).host
+            cache = self.host_cache[host]
+            hit = s.prewarm or (
+                self.prof.name in cache
+                and self.now - cache[self.prof.name] <= s.keepalive_s)
+            cache[self.prof.name] = self.now
+            self.host_cache_peak[host] = max(self.host_cache_peak[host],
+                                             len(cache) * pb)
+            bw = self.pcie_gbps if hit else self.ssd_gbps
+            return per_dev / gbps_to_bytes_per_s(bw)
+        if s.data_plane == "network_naive":
+            # serialized unicast from the single host copy; interference-
+            # ignorant flows run at ~2/3 speed when serving shares the link
+            t = pb / gbps_to_bytes_per_s(self.net_gbps)
+            if s.allow_interference and self._active_instances("prefill"):
+                t *= 1.5
+            start = max(self.now, self._naive_src_free)
+            self._naive_src_free = start + t
+            self.net_scale_bytes += pb
+            return (start + t) - self.now
+        raise ValueError(s.data_plane)
+
+    def _do_scale(self, phase: str, n_new: int) -> None:
+        """Allocate and start loading n_new instances."""
+        alloc: list[list[int]] = []
+        for _ in range(n_new):
+            devs = self._alloc_devices(self.prof.devices_per_instance)
+            if devs is None:
+                break
+            # reserve immediately so subsequent allocs don't reuse
+            for i in devs:
+                self.topo.device(i).model = self.prof.name
+                self.topo.device(i).role = (Role.PREFILL if phase == "prefill"
+                                            else Role.DECODE)
+            alloc.append(devs)
+        if not alloc:
+            return
+        pb = self.prof.param_bytes
+
+        if self.sys.data_plane == "network_multicast":
+            # ONE Algorithm-11 plan covers the whole batch (multi-chain)
+            for devs in alloc:  # roles already set; undo for planning targets
+                for i in devs:
+                    self.topo.device(i).role = Role.FREE
+                    self.topo.device(i).model = None
+            gpu_srcs, host = self.pool.sources(self.prof.name)
+            tgt_ids = [i for devs in alloc for i in devs]
+            plan = mc.plan_multicast(self.topo, gpu_srcs, tgt_ids, len(tgt_ids))
+            if plan.chains:
+                t = plan.transfer_seconds(pb)
+            else:
+                # no GPU copy anywhere: O(1) host copy seeds the chain
+                bw = min(self.pcie_gbps, self.net_gbps)
+                t = pb / gbps_to_bytes_per_s(bw)
+            self.net_scale_bytes += pb * len(alloc)
+            for devs in alloc:
+                delay = t + self.sys.control_plane_s
+                self.scale_seconds.append(delay)
+                self.scale_events += 1
+                inst = self._activate_instance(phase, devs, self.now + delay)
+                self.push(self.now + delay, "scale_done", inst.iid)
+                if self.sys.live and phase == "prefill":
+                    # pair the loading target with the most-loaded active
+                    # source; the source's throughput ramps with layer loads
+                    srcs = self._active_instances("prefill")
+                    if srcs:
+                        src = max(srcs, key=lambda i: len(i.queue))
+                        if src.live_boost is None:
+                            src.live_boost = LiveSession(
+                                self.prof.n_layers,
+                                pb // self.prof.n_layers,
+                                pb / max(t, 1e-9),
+                                started_at=self.now,
+                            )
+            return
+
+        for devs in alloc:
+            delay = self._delay_simple(devs) + self.sys.control_plane_s
+            self.scale_seconds.append(delay)
+            self.scale_events += 1
+            inst = self._activate_instance(phase, devs, self.now + delay)
+            self.push(self.now + delay, "scale_done", inst.iid)
+
+    # -- serving: prefill ------------------------------------------------------
+    def _best_prefill(self) -> Instance | None:
+        cands = self._active_instances("prefill")
+        if not cands:
+            # fall back to the earliest-activating instance (requests queue)
+            pend = self._live_instances("prefill")
+            return min(pend, key=lambda i: i.active_from) if pend else None
+        return min(cands, key=lambda i: (len(i.queue), max(i.busy_until - self.now, 0.0)))
+
+    def _kick_prefill(self, inst: Instance) -> None:
+        if inst.retired or not inst.queue:
+            return
+        if self.now < inst.active_from:
+            self.push(inst.active_from, "prefill_round", inst.iid)
+            return
+        if inst.busy_until > self.now + 1e-12:
+            self.push(inst.busy_until, "prefill_round", inst.iid)
+            return
+        mult = inst.boost(self.now)  # >= 1; live cooperative execution
+        req: Request = inst.queue.popleft()
+        service = req.prompt / (self.prof.prefill_tps * mult)
+        inst.busy_until = self.now + service
+        self.push(inst.busy_until, "prefill_done", (inst.iid, req.rid))
+
+    # -- serving: decode -------------------------------------------------------
+    def _best_decode(self, req: Request) -> Instance | None:
+        need = req.prompt + req.output
+        cands = [i for i in self._active_instances("decode")
+                 if i.kv_tokens + need <= self.prof.kv_capacity_tokens]
+        if not cands:
+            return None
+        return min(cands, key=lambda i: i.kv_tokens)
+
+    def _admit_waiting(self, inst: Instance) -> None:
+        while self.waiting_decode:
+            r = self.waiting_decode[0]
+            if inst.kv_tokens + r.prompt + r.output > self.prof.kv_capacity_tokens:
+                break
+            self.waiting_decode.popleft()
+            was_empty = not inst.active_reqs
+            inst.active_reqs[r.rid] = r
+            inst.kv_tokens += r.prompt + r.output
+            if was_empty:
+                self.push(self.now, "decode_round", inst.iid)
+
+    def _decode_round(self, inst: Instance) -> None:
+        if inst.retired or not inst.active_reqs:
+            return
+        if inst.busy_until > self.now + 1e-12:
+            self.push(inst.busy_until, "decode_round", inst.iid)
+            return
+        batch = list(inst.active_reqs.values())
+        ctx = sum(r.prompt + r.decoded for r in batch) / len(batch)
+        round_t = self.prof.weight_pass_s + len(batch) * self.prof.kv_read_s(ctx)
+        t_end = self.now + round_t
+        for r in batch:
+            r.decoded += 1
+            r.token_times.append(t_end)
+            if r.decoded >= r.output:
+                inst.active_reqs.pop(r.rid, None)
+                inst.kv_tokens -= r.prompt + r.output
+                self.done.add(r.rid)
+        inst.busy_until = t_end
+        self._admit_waiting(inst)
+        if inst.active_reqs:
+            self.push(t_end, "decode_round", inst.iid)
+
+    # -- monitoring / autoscaling ---------------------------------------------
+    def _monitor(self) -> None:
+        if not self.sys.autoscale:
+            return
+        pre = self._live_instances("prefill")
+        dec = self._live_instances("decode")
+        q_tokens = sum(r.prompt for i in pre for r in i.queue)
+        inflight = sum(1 for i in pre if i.busy_until > self.now)
+        ptps = q_tokens / max(self.prof.ttft_slo_s, 1e-3) + inflight * self.prof.prefill_tps
+        kv_frac = (max((i.kv_tokens for i in dec), default=0)
+                   / self.prof.kv_capacity_tokens)
+        dtokens = sum(len(i.active_reqs) for i in dec)
+        dtps = dtokens / max(self.prof.weight_pass_s + self.prof.kv_read_s(1024), 1e-9) * 1e-3
+        self.scaler.prefill_mon.record(LoadSample(self.now, ptps, 0.0, q_tokens))
+        self.scaler.decode_mon.record(
+            LoadSample(self.now, dtps, kv_frac, len(self.waiting_decode)))
+        d = self.scaler.decide(self.now, len(pre), len(dec))
+        if d.prefill_delta > 0:
+            self._do_scale("prefill", d.prefill_delta)
+        elif d.prefill_delta < 0 and len(pre) > 1:
+            idle = [i for i in self._active_instances("prefill")
+                    if not i.queue and i.busy_until <= self.now and i.live_boost is None]
+            if idle:
+                self._retire_instance(idle[0])
+        if d.decode_delta > 0:
+            self._do_scale("decode", d.decode_delta)
+        elif d.decode_delta < 0 and len(dec) > 1:
+            idle = [i for i in self._active_instances("decode") if not i.active_reqs]
+            if idle:
+                self._retire_instance(idle[0])
+
+    def _account_gpu(self, t_new: float) -> None:
+        dt = t_new - self._last_gpu_t
+        if dt > 0:
+            n_devs = sum(len(i.device_ids) for i in self.instances.values())
+            self.gpu_time += dt * n_devs
+            self._last_gpu_t = t_new
+
+    # -- main loop ---------------------------------------------------------------
+    def run(self, trace: list[tuple[float, int, int]]) -> SimResult:
+        """trace: list of (arrival_s, prompt_tokens, output_tokens)."""
+        reqs = [Request(i, t, p, o) for i, (t, p, o) in enumerate(trace)]
+        for r in reqs:
+            self._reqs[r.rid] = r
+            self.push(r.arrival, "arrival", r)
+        horizon = max(t for t, _, _ in trace) + 120.0
+
+        if self.sys.autoscale:
+            init_p, init_d = 1, 1
+        else:
+            init_p, init_d = self.sys.fixed_prefill, self.sys.fixed_decode
+        for _ in range(init_p):
+            devs = self._alloc_devices(self.prof.devices_per_instance)
+            if devs:
+                self._activate_instance("prefill", devs, 0.0)
+        for _ in range(init_d):
+            devs = self._alloc_devices(self.prof.devices_per_instance)
+            if devs:
+                self._activate_instance("decode", devs, 0.0)
+
+        self.push(0.0, "monitor")
+        guard = 0
+        while self.events and guard < 5_000_000:
+            guard += 1
+            t, _, kind, payload = heapq.heappop(self.events)
+            if t > horizon:
+                break
+            self._account_gpu(t)
+            self.now = t
+            if kind == "arrival":
+                r: Request = payload
+                inst = self._best_prefill()
+                if inst is None:
+                    self.push(self.now + 0.05, "arrival", r)
+                    continue
+                inst.queue.append(r)
+                self._kick_prefill(inst)
+            elif kind in ("prefill_round", "kick_prefill"):
+                inst = self.instances.get(payload)
+                if inst:
+                    self._kick_prefill(inst)
+            elif kind == "prefill_done":
+                iid, rid = payload
+                inst = self.instances.get(iid)
+                r = self._reqs[rid]
+                r.prefill_done = self.now
+                dinst = self._best_decode(r)
+                if dinst is None:
+                    self.waiting_decode.append(r)
+                else:
+                    was_empty = not dinst.active_reqs
+                    dinst.active_reqs[r.rid] = r
+                    dinst.kv_tokens += r.prompt + r.output
+                    if was_empty:
+                        self.push(self.now, "decode_round", dinst.iid)
+                if inst:
+                    self._kick_prefill(inst)
+            elif kind == "decode_round":
+                inst = self.instances.get(payload)
+                if inst:
+                    self._decode_round(inst)
+            elif kind == "scale_done":
+                inst = self.instances.get(payload)
+                if inst is not None:
+                    if inst.phase == "prefill":
+                        # steal queued work from overloaded active siblings
+                        sib = self._active_instances("prefill")
+                        donors = sorted(sib, key=lambda i: -len(i.queue))
+                        for d_inst in donors:
+                            if d_inst.live_boost is not None:
+                                d_inst.live_boost = None  # rebalance step 3
+                            while len(d_inst.queue) > len(inst.queue) + 1:
+                                inst.queue.append(d_inst.queue.pop())
+                        self._kick_prefill(inst)
+                    else:
+                        self._admit_waiting(inst)
+            elif kind == "monitor":
+                self._monitor()
+                self.timeline.append(
+                    (self.now, len(self._live_instances("prefill")),
+                     len(self._live_instances("decode"))))
+                if self.now < horizon and len(self.done) < len(reqs):
+                    self.push(self.now + self.monitor_dt, "monitor")
+        self._account_gpu(self.now)
+        return SimResult(
+            system=self.sys.name,
+            requests=reqs,
+            gpu_time_s=self.gpu_time,
+            host_cache_peak_bytes=dict(self.host_cache_peak),
+            scale_events=self.scale_events,
+            scale_seconds=self.scale_seconds,
+            net_scale_bytes=self.net_scale_bytes,
+            timeline=self.timeline,
+        )
+
+
+def run_system(system: SystemConfig, prof: ModelProfile,
+               trace: list[tuple[float, int, int]], **kw) -> SimResult:
+    return Simulator(system, prof, **kw).run(trace)

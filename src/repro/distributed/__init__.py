@@ -1,0 +1,23 @@
+from repro.distributed.sharding import (
+    ShardingRules,
+    TensorSpec,
+    abstract_from_template,
+    current_rules,
+    init_from_template,
+    resolve_spec,
+    shard,
+    specs_from_template,
+    use_sharding_rules,
+)
+
+__all__ = [
+    "ShardingRules",
+    "TensorSpec",
+    "abstract_from_template",
+    "current_rules",
+    "init_from_template",
+    "resolve_spec",
+    "shard",
+    "specs_from_template",
+    "use_sharding_rules",
+]

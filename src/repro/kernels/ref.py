@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against
+(``tests/test_kernels.py`` sweeps shapes/dtypes with assert_allclose, running
+the kernels in ``interpret=True`` mode on CPU).  The attention oracles are
+shared with the model code (``repro.models.layers``) so the model's compute
+path and the kernel contract are definitionally identical.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import (  # noqa: F401  (re-exported oracles)
+    attention_reference,
+    chunked_attention,
+    decode_attention_reference,
+)
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, Sq, H, D)
+    k: jax.Array,  # (B, Sk, KV, D)
+    v: jax.Array,  # (B, Sk, KV, D)
+    *,
+    causal: bool = True,
+    softmax_scale: float | None = None,
+) -> jax.Array:
+    return attention_reference(q, k, v, causal=causal, softmax_scale=softmax_scale)
+
+
+def decode_attention_ref(
+    q: jax.Array,  # (B, H, D)
+    k_cache: jax.Array,  # (B, KV, S, D)
+    v_cache: jax.Array,  # (B, KV, S, D)
+    lengths: jax.Array,  # (B,)
+    *,
+    softmax_scale: float | None = None,
+) -> jax.Array:
+    return decode_attention_reference(q, k_cache, v_cache, lengths, softmax_scale=softmax_scale)
+
+
+def rmsnorm_ref(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)

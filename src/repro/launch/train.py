@@ -1,0 +1,109 @@
+"""Training driver: end-to-end distributed training with fault tolerance.
+
+Runs any registered architecture at any scale:
+
+  # CPU smoke (reduced config, 1 device)
+  PYTHONPATH=src python -m repro.launch.train --arch granite-8b --reduced \\
+      --steps 50 --batch 8 --seq 128
+
+  # production mesh (on a real pod; here only --dry-run lowering works)
+  PYTHONPATH=src python -m repro.launch.train --arch granite-8b \\
+      --batch 256 --seq 4096 --mesh production
+
+Fault tolerance: checkpoints every --ckpt-every steps (atomic, pruned);
+on start the driver resumes from the newest complete checkpoint, and the
+data pipeline (deterministic in step) replays from exactly that step — a
+killed-and-restarted run produces the same loss trajectory as an unkilled
+one (tested in tests/test_train.py).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticTokenPipeline, make_batch
+from repro.distributed import sharding as sh
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import transformer as TF
+from repro.training.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.training.optimizer import AdamWConfig, adamw_init
+from repro.training.train_step import build_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh", choices=["none", "host", "production"], default="none")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    opt_cfg = AdamWConfig(
+        lr=args.lr, warmup_steps=min(20, args.steps // 5 + 1), total_steps=args.steps
+    )
+
+    mesh = None
+    if args.mesh == "host":
+        mesh = make_host_mesh()
+    elif args.mesh == "production":
+        mesh = make_production_mesh()
+    rules = sh.ShardingRules(mesh).with_overrides(cfg.sharding_overrides)
+
+    key = jax.random.PRNGKey(args.seed)
+    with sh.use_sharding_rules(rules if mesh else None):
+        params = TF.init_params(key, cfg)
+    opt_state = adamw_init(params, opt_cfg)
+
+    start_step = 0
+    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        state = {"params": params, "opt": opt_state}
+        state, start_step = restore_checkpoint(args.ckpt_dir, state)
+        params, opt_state = state["params"], state["opt"]
+        print(f"resumed from step {start_step}")
+
+    raw_step = build_train_step(cfg, opt_cfg, microbatches=args.microbatches)
+
+    def step_fn(p, o, b):
+        with sh.use_sharding_rules(rules if mesh else None):
+            return raw_step(p, o, b)
+
+    jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M batch={args.batch} seq={args.seq}")
+
+    t0 = time.perf_counter()
+    for step in range(start_step, args.steps):
+        batch = {
+            k: jnp.asarray(v)
+            for k, v in make_batch(cfg, args.batch, args.seq, step=step, seed=args.seed).items()
+        }
+        params, opt_state, metrics = jit_step(params, opt_state, batch)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            loss = float(metrics["loss"])
+            gn = float(metrics["grad_norm"])
+            dt = time.perf_counter() - t0
+            tok_s = (step - start_step + 1) * args.batch * args.seq / max(dt, 1e-9)
+            print(f"step {step:5d} loss {loss:.4f} grad_norm {gn:.3f} tok/s {tok_s:,.0f}")
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt_dir, step + 1, {"params": params, "opt": opt_state})
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""Mixture-of-experts layer (grok-1: 8e top-2; olmoe: 64e top-8).
+
+Token-choice top-k routing with per-group capacity dispatch:
+
+  tokens are processed in groups (bounded live memory), each group scatters
+  its tokens into an (E, C, d) buffer via positions computed from a cumsum
+  over the routing one-hot, experts run as one grouped einsum
+  (E, C, d) x (E, d, f) — the EP-shardable pattern (experts on the 'model'
+  mesh axis; XLA turns the scatter/gather into an all-to-all under EP) —
+  and results are combined back with the routing probabilities.
+
+Capacity drops (tokens beyond C per expert per group) match standard
+practice; the router aux loss (load-balance) is returned for training.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import TensorSpec, shard
+from repro.models.layers import mlp_forward
+
+
+def moe_template(cfg) -> dict[str, TensorSpec]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    t = {
+        "router": TensorSpec((d, e), ("d_model", "experts"), dtype=jnp.float32),
+        "w_up": TensorSpec((e, d, f), ("experts", "d_model", "d_ff"), dtype=cfg.dtype),
+        "w_down": TensorSpec((e, f, d), ("experts", "d_ff", "d_model"), dtype=cfg.dtype),
+    }
+    if cfg.gated_mlp:
+        t["w_gate"] = TensorSpec((e, d, f), ("experts", "d_model", "d_ff"), dtype=cfg.dtype)
+    return t
+
+
+def _expert_ffn(params: dict, x: jax.Array, cfg) -> jax.Array:
+    """x: (G, E, C, d) -> (G, E, C, d) via grouped einsum (E stays on the
+    expert-parallel mesh axis; no collective touches the FFN)."""
+    up = jnp.einsum("gecd,edf->gecf", x, params["w_up"])
+    if cfg.gated_mlp:
+        gate = jnp.einsum("gecd,edf->gecf", x, params["w_gate"])
+        hidden = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    else:
+        hidden = jax.nn.gelu(up.astype(jnp.float32)).astype(x.dtype)
+    hidden = shard(hidden, "batch", "experts", None, "act_d_ff")
+    return jnp.einsum("gecf,efd->gecd", hidden, params["w_down"])
+
+
+def moe_forward(
+    params: dict,
+    x: jax.Array,  # (B, S, d)
+    cfg,
+    *,
+    group_size: int | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (output (B,S,d), aux_loss scalar).
+
+    GShard-style one-hot einsum dispatch (§Perf B2): tokens are reshaped to
+    (G groups x S tokens); a dispatch tensor (G,S,E,C) built from routing
+    one-hots scatters tokens into per-group per-expert capacity buffers via
+    a single einsum.  Every contraction is a matmul GSPMD partitions cleanly
+    (G on the data axis, E on the model axis) — the previous `.at[].set`
+    scatter onto an expert-sharded buffer made GSPMD all-gather/all-reduce
+    the buffers (measured 5.17 TB of all-reduce per olmoe train step)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    tokens = x.reshape(b * s, d)
+    t = tokens.shape[0]
+
+    logits = (tokens.astype(jnp.float32) @ params["router"]).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topk_p, topk_i = jax.lax.top_k(probs, k)  # (T, k)
+    topk_p = topk_p / jnp.maximum(topk_p.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)  # (E,)
+    assign = jax.nn.one_hot(topk_i[:, 0], e, dtype=jnp.float32)
+    fe = jnp.mean(assign, axis=0)
+    aux = e * jnp.sum(fe * me) * cfg.router_aux_coef
+
+    # group tokens: G groups of S_g tokens; G rides the data axis like batch
+    g_sz = min(group_size or cfg.moe_group_size, t)
+    n_groups = -(-t // g_sz)
+    pad = n_groups * g_sz - t
+    tk = jnp.pad(tokens, ((0, pad), (0, 0))).reshape(n_groups, g_sz, d)
+    pi = jnp.pad(topk_p, ((0, pad), (0, 0))).reshape(n_groups, g_sz, k)
+    ii = jnp.pad(topk_i, ((0, pad), (0, 0))).reshape(n_groups, g_sz, k)
+    vm = jnp.pad(jnp.ones((t,), bool), ((0, pad),),
+                 constant_values=False).reshape(n_groups, g_sz)
+
+    cap = max(int(np.ceil(cfg.capacity_factor * g_sz * k / e)), 1)
+
+    # position of each (token, choice) within its expert: exclusive cumsum
+    # over the flattened (S*k) routing one-hots, per group
+    onehot = jax.nn.one_hot(ii, e, dtype=jnp.float32)  # (G, S, k, E)
+    flat = onehot.reshape(n_groups, g_sz * k, e)
+    pos_f = jnp.cumsum(flat, axis=1) - flat  # (G, S*k, E)
+    pos = jnp.einsum("gse,gse->gs", pos_f, flat).reshape(n_groups, g_sz, k)
+    keep = (pos < cap) & (pi > 0) & vm[..., None]  # (G, S, k)
+
+    oc = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)  # (G,S,k,C)
+    oc = oc * keep[..., None]
+    # dispatch (0/1) and combine (routing-prob-weighted) tensors
+    dispatch = jnp.einsum("gske,gskc->gsec", onehot, oc)  # (G, S, E, C)
+    combine = jnp.einsum("gske,gskc->gsec", onehot * pi[..., None], oc)
+    dispatch = shard(dispatch, "batch", None, "experts", None)
+    combine = shard(combine, "batch", None, "experts", None)
+
+    buf = jnp.einsum("gsec,gsd->gecd", dispatch.astype(x.dtype), tk)  # (G,E,C,d)
+    buf = shard(buf, "batch", "experts", None, None)
+    out_buf = _expert_ffn(params, buf, cfg)
+    y = jnp.einsum("gsec,gecd->gsd", combine,
+                   out_buf.astype(jnp.float32))  # (G, S, d)
+    out = y.reshape(n_groups * g_sz, d)[:t].reshape(b, s, d).astype(x.dtype)
+    return shard(out, "batch", "seq", "act_d_model"), aux

@@ -1,0 +1,148 @@
+"""Per-instance serving engine: continuous batching over jitted JAX steps.
+
+One :class:`InstanceEngine` is what runs on a serving instance (a TP group of
+chips).  It owns the parameters, a slotted KV cache, and pre-lowered
+executables — the TPU analogue of the paper's CUDA-context-pool trick
+(App. A.1): the decode step compiles once per (arch, n_slots) and prefill
+once per prompt-length bucket, so autoscaling never pays a compile at
+scale time.
+
+Continuous batching (Orca-style): a fixed number of decode slots; finished
+sequences free their slot immediately and queued requests are admitted at
+the next step boundary.  ``loaded_layers`` tracks live-scaling progress: a
+partially-loaded engine reports ``can_serve_alone() == False`` and the live
+execution scheduler routes its work through cooperative execution instead.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from collections import deque
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as TF
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    rid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int
+    out_tokens: list[int] = dataclasses.field(default_factory=list)
+    slot: int | None = None
+    done: bool = False
+
+
+class InstanceEngine:
+    """Continuous-batching engine around the unified model."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: dict,
+        *,
+        n_slots: int = 8,
+        max_seq: int = 512,
+    ):
+        # per-row (non-lockstep) appends: engine slots are admitted at
+        # different times, so their cache positions differ (§Perf C2 note)
+        self.cfg = cfg = cfg.replace(uniform_decode=False)
+        self.params = params
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.queue: deque[ServeRequest] = deque()
+        self.active: dict[int, ServeRequest] = {}  # slot -> request
+        self.free_slots = list(range(n_slots))[::-1]
+        self.caches = TF.init_caches(cfg, n_slots, max_seq)
+        self.last_tokens = jnp.zeros((n_slots,), jnp.int32)
+        self.slot_live = jnp.zeros((n_slots,), bool)
+        self.loaded_layers = cfg.n_layers  # < n_layers while live-scaling
+        self.steps = 0
+
+        n = self.n_slots
+
+        @jax.jit
+        def _decode_all(params, last_tokens, caches, live_mask):
+            nxt, new_caches = TF.decode_step(cfg, params, last_tokens, caches)
+
+            def sel(new, old):
+                if new.ndim >= 2 and new.shape[1] == n:
+                    shape = (1, n) + (1,) * (new.ndim - 2)
+                    return jnp.where(live_mask.reshape(shape), new, old)
+                return new
+
+            merged = jax.tree.map(sel, new_caches, caches)
+            return jnp.where(live_mask, nxt, last_tokens), merged
+
+        @jax.jit
+        def _prefill_one(params, tokens):
+            one = TF.init_caches(cfg, 1, max_seq)
+            return TF.prefill(cfg, params, tokens, one)
+
+        self._decode_all = _decode_all
+        self._prefill_one = _prefill_one
+
+    # -- live scaling hooks -----------------------------------------------------
+    def set_loaded_layers(self, k: int) -> None:
+        self.loaded_layers = min(k, self.cfg.n_layers)
+
+    def can_serve_alone(self) -> bool:
+        return self.loaded_layers >= self.cfg.n_layers
+
+    # -- public API --------------------------------------------------------------
+    def submit(self, req: ServeRequest) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        while self.queue and self.free_slots:
+            req = self.queue.popleft()
+            slot = self.free_slots.pop()
+            req.slot = slot
+            tokens = jnp.asarray(req.prompt[None].astype(np.int32))
+            nxt, one = self._prefill_one(self.params, tokens)
+
+            def splice(old, new):
+                if old.ndim >= 2 and old.shape[1] == self.n_slots:
+                    return old.at[:, slot].set(new[:, 0])
+                return old
+
+            self.caches = jax.tree.map(splice, self.caches, one)
+            self.last_tokens = self.last_tokens.at[slot].set(int(nxt[0]))
+            self.slot_live = self.slot_live.at[slot].set(True)
+            req.out_tokens.append(int(nxt[0]))
+            self.active[slot] = req
+
+    def step(self) -> list[ServeRequest]:
+        """One continuous-batching iteration; returns finished requests."""
+        self._admit()
+        finished: list[ServeRequest] = []
+        if not self.active:
+            return finished
+        nxt, self.caches = self._decode_all(
+            self.params, self.last_tokens, self.caches, self.slot_live
+        )
+        self.last_tokens = nxt
+        self.steps += 1
+        for slot, req in list(self.active.items()):
+            req.out_tokens.append(int(nxt[slot]))
+            if len(req.out_tokens) >= req.max_new_tokens:
+                req.done = True
+                finished.append(req)
+                self.active.pop(slot)
+                self.free_slots.append(slot)
+                self.slot_live = self.slot_live.at[slot].set(False)
+        return finished
+
+    def run_until_done(self, max_steps: int = 10_000) -> list[ServeRequest]:
+        out: list[ServeRequest] = []
+        for _ in range(max_steps):
+            out.extend(self.step())
+            if not self.active and not self.queue:
+                break
+        return out

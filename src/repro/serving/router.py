@@ -1,0 +1,110 @@
+"""Cluster-level request router: FCFS dispatch + SLO accounting.
+
+The router is the component between the load balancer and the per-instance
+engines (Fig. 6): it keeps one FCFS queue per model, dispatches to the
+least-loaded *fully-loaded* instance, and — during live scaling — routes
+through the cooperative (source, target) pair per the three-step transition
+protocol (§5.2): a partially-loaded engine never receives requests directly;
+its work arrives via the paired source's shared priority queue.
+
+SLO accounting matches the paper's §6.2 definition: a request violates when
+TTFT or any TBT exceeds 5x the workload's average.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    rid: int
+    arrival: float
+    prompt_tokens: int
+    max_new_tokens: int
+    ttft: float | None = None
+    token_times: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+    def tbts(self) -> list[float]:
+        ts = self.token_times
+        return [b - a for a, b in zip(ts, ts[1:])]
+
+
+@dataclasses.dataclass
+class SLOReport:
+    n: int
+    mean_ttft: float
+    p99_ttft: float
+    mean_tbt: float
+    p99_tbt: float
+    attainment: float  # fraction within 5x-average SLO (paper §6.2)
+
+
+class Router:
+    """FCFS router over a set of engines (objects with ``submit``/``step``
+    and ``can_serve_alone``)."""
+
+    def __init__(self):
+        self.queue: deque[RequestRecord] = deque()
+        self.records: dict[int, RequestRecord] = {}
+        self._rid = 0
+
+    def submit(self, prompt_tokens: int, max_new_tokens: int, now: float) -> int:
+        self._rid += 1
+        rec = RequestRecord(self._rid, now, prompt_tokens, max_new_tokens)
+        self.records[rec.rid] = rec
+        self.queue.append(rec)
+        return rec.rid
+
+    def dispatch(self, engines: list[Any]) -> list[tuple[RequestRecord, Any]]:
+        """Assign queued requests FCFS to the least-loaded serving-capable
+        engine.  Engines mid-live-scaling (can_serve_alone() False) are
+        skipped — their work arrives via cooperative execution."""
+        ready = [e for e in engines if getattr(e, "can_serve_alone", lambda: True)()]
+        out = []
+        while self.queue and ready:
+            eng = min(ready, key=lambda e: len(getattr(e, "queue", [])) + len(getattr(e, "active", {})))
+            rec = self.queue.popleft()
+            out.append((rec, eng))
+        return out
+
+    # -- SLO accounting ------------------------------------------------------
+    def note_first_token(self, rid: int, now: float) -> None:
+        rec = self.records[rid]
+        if rec.ttft is None:
+            rec.ttft = now - rec.arrival
+        rec.token_times.append(now)
+
+    def note_token(self, rid: int, now: float) -> None:
+        self.records[rid].token_times.append(now)
+
+    def note_done(self, rid: int) -> None:
+        self.records[rid].done = True
+
+    def slo_report(self, multiplier: float = 5.0) -> SLOReport:
+        recs = [r for r in self.records.values() if r.ttft is not None]
+        if not recs:
+            return SLOReport(0, 0, 0, 0, 0, 1.0)
+        ttfts = np.array([r.ttft for r in recs])
+        tbts = np.concatenate([np.array(r.tbts()) for r in recs if r.tbts()] or [np.zeros(1)])
+        t_slo = multiplier * float(ttfts.mean())
+        b_slo = multiplier * float(tbts.mean()) if len(tbts) else float("inf")
+        ok = sum(
+            1
+            for r in recs
+            if r.ttft <= t_slo and all(t <= b_slo for t in r.tbts())
+        )
+        return SLOReport(
+            n=len(recs),
+            mean_ttft=float(ttfts.mean()),
+            p99_ttft=float(np.percentile(ttfts, 99)),
+            mean_tbt=float(tbts.mean()),
+            p99_tbt=float(np.percentile(tbts, 99)),
+            attainment=ok / len(recs),
+        )

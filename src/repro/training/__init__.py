@@ -1,0 +1,3 @@
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update, lr_at
+from repro.training.train_step import build_train_step, TrainState
+from repro.training.checkpoint import save_checkpoint, restore_checkpoint, latest_step

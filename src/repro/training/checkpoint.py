@@ -1,0 +1,137 @@
+"""Distributed checkpointing: atomic, resumable, shard-aware.
+
+Fault-tolerance contract (the training half of the paper's App. A.1 story —
+the serving half is the parameter pool's >=1-copy invariant):
+
+  * **atomic**: a checkpoint directory is written under ``step_N.tmp`` and
+    renamed to ``step_N`` only after every leaf + the manifest have been
+    fsynced — a crash mid-write never corrupts the latest checkpoint;
+  * **restart**: ``restore_checkpoint(dir)`` returns the newest complete
+    step; the train driver resumes from it after any node failure;
+  * **shard-aware**: each leaf is saved via ``jax.device_get`` of its
+    *addressable* shards and restored with ``jax.device_put`` against the
+    target sharding, so a restore can change mesh shape (elastic restart:
+    e.g. a 512-chip job resuming on 256 chips after losing a pod).
+
+Storage is a flat ``.npy`` file per leaf keyed by the pytree path, plus a
+JSON manifest (structure, shapes, dtypes, step) — no external deps.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree: Any) -> list[tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        out.append((key, leaf))
+    return out
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3) -> str:
+    """Atomically write ``tree`` as checkpoint ``step``; prune old ones."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    manifest = {"step": step, "leaves": {}}
+    for key, leaf in _flatten_with_paths(tree):
+        arr = np.asarray(jax.device_get(leaf))
+        dtype_name = str(arr.dtype)
+        store = arr
+        if arr.dtype.kind == "V" or dtype_name not in np.sctypeDict:
+            # ml_dtypes (bfloat16, fp8...) round-trip as unsigned views —
+            # np.load in a fresh process would otherwise see raw void bytes
+            store = arr.view({1: np.uint8, 2: np.uint16, 4: np.uint32}[arr.dtype.itemsize])
+        fname = key.replace("/", "__") + ".npy"
+        with open(os.path.join(tmp, fname), "wb") as f:
+            np.save(f, store)
+            f.flush()
+            os.fsync(f.fileno())
+        manifest["leaves"][key] = {
+            "file": fname,
+            "shape": list(arr.shape),
+            "dtype": dtype_name,
+        }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic publish
+
+    # prune
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)
+    return final
+
+
+def all_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+                out.append(int(name[5:]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(
+    ckpt_dir: str,
+    target: Any,
+    *,
+    step: int | None = None,
+    shardings: Any | None = None,
+) -> tuple[Any, int]:
+    """Restore into the structure of ``target`` (a pytree of arrays or
+    ShapeDtypeStructs).  ``shardings``, when given (a matching pytree of
+    NamedShardings), re-shards each leaf for the *current* mesh — this is
+    what makes restarts elastic across mesh shapes."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    keys = [k for k, _ in _flatten_with_paths(target)]
+    leaves_t, treedef = jax.tree_util.tree_flatten(target)
+    shard_leaves = (
+        treedef.flatten_up_to(shardings) if shardings is not None else [None] * len(leaves_t)
+    )
+    new_leaves = []
+    for key, tgt, shd in zip(keys, leaves_t, shard_leaves):
+        rec = manifest["leaves"][key]
+        arr = np.load(os.path.join(path, rec["file"]))
+        if str(arr.dtype) != rec["dtype"]:
+            arr = arr.view(jnp.dtype(rec["dtype"]))  # undo the storage view
+        if shd is not None:
+            new_leaves.append(jax.device_put(arr, shd))
+        else:
+            new_leaves.append(jnp.asarray(arr))
+    return treedef.unflatten(new_leaves), step

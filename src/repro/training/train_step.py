@@ -1,0 +1,114 @@
+"""Distributed train step: loss -> grad -> AdamW, with grad-accumulation
+microbatching and remat-over-layers.
+
+``build_train_step`` returns a pure function
+
+    (params, opt_state, batch) -> (params, opt_state, metrics)
+
+suitable for ``jax.jit`` with explicit in/out shardings (the launcher and
+the dry-run both consume it).  Microbatching is a ``lax.scan`` over
+``cfg.microbatches`` slices of the global batch: activation memory is one
+microbatch, gradients accumulate in f32.  Remat happens inside the model's
+scan-over-layers (``cfg.remat``), so live activations are one layer x one
+microbatch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as TF
+from repro.models.config import ModelConfig
+from repro.training.optimizer import AdamWConfig, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainState:
+    """Bundled (params, opt_state, step) helper for drivers/checkpointing."""
+
+    params: Any
+    opt_state: dict
+
+    @property
+    def step(self) -> int:
+        return int(self.opt_state["step"])
+
+
+def _split_microbatches(batch: dict, n: int) -> dict:
+    """(B, ...) -> (n, B//n, ...) for each leaf."""
+
+    def re(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape(n, b // n, *x.shape[1:])
+
+    return jax.tree.map(re, batch)
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig,
+    *,
+    microbatches: int | None = None,
+    loss_fn: Callable | None = None,
+) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    batch: {"tokens": (B, S) i32, "labels": (B, S) i32, ["frames": (B, Sf, d)]}
+    """
+    n_micro = microbatches if microbatches is not None else max(cfg.microbatches, 1)
+    base_loss = loss_fn or (
+        lambda p, mb: TF.lm_loss(cfg, p, mb["tokens"], mb["labels"], mb.get("frames"))
+    )
+
+    def train_step(params: Any, opt_state: dict, batch: dict):
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(base_loss)(params, batch)
+        else:
+            micro = _split_microbatches(batch, n_micro)
+
+            def body(acc, mb):
+                loss_sum, g_acc = acc
+                l, g = jax.value_and_grad(base_loss)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), g_acc, g
+                )
+                return (loss_sum + l, g_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss_sum, g_sum), _ = jax.lax.scan(body, (jnp.zeros(()), g0), micro)
+            loss = loss_sum / n_micro
+            grads = jax.tree.map(lambda g: (g / n_micro), g_sum)
+
+        new_params, new_opt, om = adamw_update(params, grads, opt_state, opt_cfg)
+        metrics = {"loss": loss, **om}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_batch_abstract(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """ShapeDtypeStruct batch for the dry-run (deliverable e)."""
+    out = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+    }
+    if cfg.family in ("vlm", "encdec"):
+        nf = cfg.n_frontend_tokens or 64
+        out["frames"] = jax.ShapeDtypeStruct((batch, nf, cfg.d_model), cfg.dtype)
+    return out
+
+
+def batch_axes(cfg: ModelConfig) -> dict:
+    """Logical-axis pytree for the batch (consumed by shardings_for_axes)."""
+    out = {
+        "tokens": ("batch", "seq"),
+        "labels": ("batch", "seq"),
+    }
+    if cfg.family in ("vlm", "encdec"):
+        out["frames"] = ("batch", "seq", "act_d_model")
+    return out

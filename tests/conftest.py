@@ -1,0 +1,10 @@
+import os
+import sys
+
+# Tests run on the single real CPU device — the 512-device flag is ONLY for
+# the dry-run (launch/dryrun.py sets it before any jax import).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

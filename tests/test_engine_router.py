@@ -1,0 +1,111 @@
+"""Serving engine (continuous batching) + router + paged KV cache."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as TF
+from repro.models.kvcache import PagedKVCache
+from repro.serving.engine import InstanceEngine, ServeRequest
+from repro.serving.router import Router
+
+CFG = get_config("granite-8b", reduced=True)
+
+
+def _engine(n_slots=3, max_seq=64):
+    params = TF.init_params(jax.random.PRNGKey(0), CFG)
+    return InstanceEngine(CFG, params, n_slots=n_slots, max_seq=max_seq)
+
+
+def test_continuous_batching_completes_all_requests():
+    eng = _engine(n_slots=3)
+    rng = np.random.default_rng(0)
+    reqs = [
+        ServeRequest(i, rng.integers(0, CFG.vocab_size, size=8).astype(np.int32),
+                     max_new_tokens=4 + (i % 3))
+        for i in range(7)  # more requests than slots -> queueing + reuse
+    ]
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run_until_done()
+    assert len(done) == 7
+    for r in done:
+        assert len(r.out_tokens) >= r.max_new_tokens
+        assert all(0 <= t < CFG.vocab_size for t in r.out_tokens)
+
+
+def test_engine_batched_equals_sequential():
+    """Slot interleaving must not change any request's tokens."""
+    prompts = [np.arange(5, dtype=np.int32) + i for i in range(3)]
+    eng_b = _engine(n_slots=3)
+    for i, p in enumerate(prompts):
+        eng_b.submit(ServeRequest(i, p, 5))
+    batched = {r.rid: r.out_tokens for r in eng_b.run_until_done()}
+
+    for i, p in enumerate(prompts):
+        eng_s = _engine(n_slots=1)
+        eng_s.submit(ServeRequest(i, p, 5))
+        (r,) = eng_s.run_until_done()
+        assert batched[i] == r.out_tokens
+
+
+def test_live_scaling_gate():
+    eng = _engine()
+    assert eng.can_serve_alone()
+    eng.set_loaded_layers(1)
+    assert not eng.can_serve_alone()
+    eng.set_loaded_layers(CFG.n_layers)
+    assert eng.can_serve_alone()
+
+
+def test_router_fcfs_and_slo():
+    router = Router()
+    r1 = router.submit(10, 5, now=0.0)
+    r2 = router.submit(10, 5, now=0.1)
+    eng = _engine()
+    dispatched = router.dispatch([eng])
+    assert [rec.rid for rec, _ in dispatched] == [r1, r2]  # FCFS order
+    router.note_first_token(r1, 0.5)
+    router.note_first_token(r2, 0.7)
+    for t in (0.6, 0.7, 0.8):
+        router.note_token(r1, t)
+    rep = router.slo_report()
+    assert rep.n == 2
+    assert rep.mean_ttft == pytest.approx((0.5 + 0.6) / 2)
+    assert 0 <= rep.attainment <= 1
+
+
+def test_router_skips_partially_loaded_engines():
+    router = Router()
+    router.submit(10, 5, now=0.0)
+    loading = _engine()
+    loading.set_loaded_layers(1)
+    assert router.dispatch([loading]) == []  # work arrives cooperatively
+    ready = _engine()
+    assert len(router.dispatch([loading, ready])) == 1
+
+
+def test_paged_cache_matches_contiguous():
+    cache = PagedKVCache(n_blocks=16, block_size=4, n_kv=2, head_dim=8, dtype=np.float32)
+    rng = np.random.default_rng(1)
+    k = rng.standard_normal((11, 2, 8)).astype(np.float32)
+    v = rng.standard_normal((11, 2, 8)).astype(np.float32)
+    cache.allocate(0)
+    cache.append(0, k[:6], v[:6])
+    cache.append(0, k[6:], v[6:])
+    kg, vg, length = cache.gather(0, max_seq=16)
+    assert length == 11
+    np.testing.assert_array_equal(kg[:11], k)
+    np.testing.assert_array_equal(vg[:11], v)
+    np.testing.assert_array_equal(kg[11:], 0)
+    free_before = cache.n_free_blocks
+    cache.release(0)
+    assert cache.n_free_blocks == free_before + 3  # ceil(11/4) blocks back
+
+
+def test_paged_cache_oom():
+    cache = PagedKVCache(n_blocks=2, block_size=2, n_kv=1, head_dim=4, dtype=np.float32)
+    cache.allocate(0)
+    with pytest.raises(MemoryError):
+        cache.append(0, np.zeros((5, 1, 4), np.float32), np.zeros((5, 1, 4), np.float32))

@@ -1,0 +1,97 @@
+"""Loop-aware HLO analyzer: trip counts, dot flops, collective accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze, tokenize
+
+X = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+
+
+def test_scan_trip_count_exact():
+    def scanned(x, ws):
+        def body(x, w):
+            return x @ w, None
+        return jax.lax.scan(body, x, ws)[0]
+
+    ws = jax.ShapeDtypeStruct((10, 128, 128), jnp.float32)
+    c = jax.jit(scanned).lower(X, ws).compile()
+    rep = analyze(c.as_text())
+    assert rep.dot_flops == pytest.approx(2 * 128**3 * 10)
+    # XLA's own cost_analysis counts the body once — our whole reason to exist
+    assert c.cost_analysis()["flops"] < rep.dot_flops / 5
+
+
+def test_nested_scan_multiplies():
+    def nested(x, ws):
+        def outer(x, w):
+            def inner(x, _):
+                return x @ w, None
+            return jax.lax.scan(inner, x, None, length=3)[0], None
+        return jax.lax.scan(outer, x, ws)[0]
+
+    ws = jax.ShapeDtypeStruct((10, 128, 128), jnp.float32)
+    c = jax.jit(nested).lower(X, ws).compile()
+    assert analyze(c.as_text()).dot_flops == pytest.approx(2 * 128**3 * 30)
+
+
+def test_single_dot_flops_and_bytes():
+    w = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    c = jax.jit(lambda x, w: x @ w).lower(X, w).compile()
+    rep = analyze(c.as_text())
+    assert rep.dot_flops == pytest.approx(2 * 128 * 128 * 256)
+    io = (128 * 128 + 128 * 256 + 128 * 256) * 4
+    assert rep.hbm_bytes == pytest.approx(io, rel=0.3)
+
+
+def test_bf16_convert_not_counted():
+    """CPU legalizes bf16 dots via f32 converts; the proxy must count bf16."""
+    xb = jax.ShapeDtypeStruct((128, 128), jnp.bfloat16)
+    wb = jax.ShapeDtypeStruct((128, 128), jnp.bfloat16)
+    c = jax.jit(lambda x, w: x @ w).lower(xb, wb).compile()
+    rep = analyze(c.as_text())
+    bf16_io = (128 * 128) * 3 * 2
+    # within 2x of pure-bf16 IO (the f32 result write may remain)
+    assert rep.hbm_bytes <= bf16_io * 2.5
+
+
+def test_collectives_counted_with_trip_multiplier():
+    import subprocess, sys, os, textwrap
+
+    code = textwrap.dedent("""
+        import os
+        os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+        import sys; sys.path.insert(0, %r)
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.launch.hlo_analysis import analyze
+        mesh = jax.make_mesh((2, 4), ('data', 'model'),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+        def f(x, ws):
+            def body(x, w):
+                y = x @ w
+                return jax.lax.with_sharding_constraint(
+                    y, NamedSharding(mesh, P('data', None))), None
+            return jax.lax.scan(body, x, ws)[0]
+
+        xs = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+        ws = jax.ShapeDtypeStruct((5, 128, 128), jnp.float32)
+        c = jax.jit(f, in_shardings=(NamedSharding(mesh, P('data', None)),
+                                     NamedSharding(mesh, P(None, None, 'model')))).lower(xs, ws).compile()
+        rep = analyze(c.as_text())
+        # one activation all-gather per scan iteration over the model axis
+        total = sum(rep.coll_count.values())
+        assert total >= 5, rep.coll_count
+        print('ok', rep.coll_count)
+    """ % os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src")))
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+
+
+def test_tokenizer_finds_entry():
+    c = jax.jit(lambda x: x * 2).lower(X).compile()
+    comps, entry = tokenize(c.as_text())
+    assert entry is not None and entry in comps

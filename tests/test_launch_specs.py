@@ -1,0 +1,84 @@
+"""Launch layer unit tests that run on 1 device: cell enumeration, abstract
+input specs, roofline bookkeeping.  (The real lower/compile sweep is
+launch/dryrun.py — too heavy for unit tests.)"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, cells, get_config, shape_applicable
+from repro.launch.dryrun import model_flops
+from repro.launch.steps import input_specs, make_rules, opt_config_for
+from repro.training.train_step import make_batch_abstract
+
+
+def test_cell_grid_is_the_assignment():
+    grid = list(cells())
+    # 10 archs x 4 shapes minus long_500k for the 8 full-attention archs
+    assert len(grid) == 10 * 4 - 8
+    long_archs = {a for a, s, _ in grid if s == "long_500k"}
+    assert long_archs == {"mamba2-370m", "zamba2-2.7b"}
+
+
+@pytest.mark.parametrize("arch,shape", [(a, s) for a, s, _ in cells()])
+def test_input_specs_are_abstract_and_complete(arch, shape):
+    specs = input_specs(arch, shape)
+    sp = SHAPES[shape]
+    leaves = jax.tree.leaves(specs)
+    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)  # no alloc
+    cfg = get_config(arch)
+    if sp.kind == "train":
+        assert specs["tokens"].shape == (sp.global_batch, sp.seq_len)
+        assert specs["labels"].shape == (sp.global_batch, sp.seq_len)
+        if cfg.family in ("vlm", "encdec"):
+            assert "frames" in specs
+    elif sp.kind == "prefill":
+        assert specs["tokens"].shape == (sp.global_batch, sp.seq_len)
+    else:
+        assert specs["last_tokens"].shape == (sp.global_batch,)
+        assert "caches" in specs
+
+
+def test_long_500k_skips_are_principled():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        ok = shape_applicable(cfg, SHAPES["long_500k"])
+        assert ok == (cfg.family in ("ssm", "hybrid"))
+
+
+def test_opt_config_bf16_moments_for_big_archs():
+    assert opt_config_for(get_config("nemotron-4-340b")).moment_dtype == jnp.bfloat16
+    assert opt_config_for(get_config("grok-1-314b")).moment_dtype == jnp.bfloat16
+    assert opt_config_for(get_config("granite-8b")).moment_dtype == jnp.float32
+
+
+def test_model_flops_formulas():
+    # dense train: 6 N D
+    cfg = get_config("granite-8b")
+    n = cfg.approx_params()
+    d = SHAPES["train_4k"].seq_len * SHAPES["train_4k"].global_batch
+    assert model_flops("granite-8b", "train_4k") == pytest.approx(6.0 * n * d)
+    # MoE uses active params only
+    moe_active = get_config("olmoe-1b-7b").approx_active_params()
+    moe_total = get_config("olmoe-1b-7b").approx_params()
+    assert moe_active < moe_total
+    assert model_flops("olmoe-1b-7b", "decode_32k") == pytest.approx(
+        2.0 * moe_active * 128
+    )
+
+
+def test_make_rules_applies_arch_overrides():
+    class _M:
+        axis_names = ("data", "model")
+        devices = __import__("numpy").zeros((16, 16))
+
+    rules = make_rules(get_config("nemotron-4-340b"), _M())
+    assert rules.rules["d_model"] == ("data",)
+    base = make_rules(get_config("granite-8b"), _M())
+    assert base.rules["d_model"] is None
+
+
+def test_batch_abstract_covers_frontends():
+    cfg = get_config("pixtral-12b")
+    b = make_batch_abstract(cfg, 8, 128)
+    assert "frames" in b and b["frames"].shape[1] == cfg.n_frontend_tokens

@@ -1,0 +1,79 @@
+"""Live scaling: cooperative execution correctness + session state machine."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.live_scaling import LiveSession, Phase, cooperative_forward, select_live_pairs
+from repro.core import multicast as mc
+from repro.core import topology as tp
+from repro.models import transformer as TF
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ["granite-8b", "olmoe-1b-7b", "mamba2-370m"])
+def test_cooperative_forward_equals_monolithic(arch):
+    """The correctness contract of live scaling (§5.2): target [0,k) +
+    source [k,L) == single-instance forward, for every split point."""
+    cfg = get_config(arch, reduced=True)
+    params = TF.init_params(KEY, cfg)
+    b, s = 2, 12
+    tokens = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+    logits_full, _ = TF.train_forward(cfg, params, tokens)
+    for k in [0, 1, cfg.n_layers // 2, cfg.n_layers]:
+        logits_coop = cooperative_forward(cfg, params, tokens, k)
+        np.testing.assert_allclose(
+            logits_coop.astype(jnp.float32),
+            logits_full.astype(jnp.float32),
+            atol=2e-2, rtol=2e-2,
+        )
+
+
+def test_cooperative_forward_traced_k_single_compile():
+    """k is a traced value: the same jitted function serves every split
+    (no per-k recompilation during loading — the TPU analogue of the CUDA
+    context pool)."""
+    cfg = get_config("granite-8b", reduced=True)
+    params = TF.init_params(KEY, cfg)
+    tokens = jax.random.randint(KEY, (1, 8), 0, cfg.vocab_size)
+    calls = {"n": 0}
+
+    @jax.jit
+    def coop(p, t, k):
+        calls["n"] += 1
+        return cooperative_forward(cfg, p, t, k)
+
+    outs = [coop(params, tokens, jnp.int32(k)) for k in range(cfg.n_layers + 1)]
+    assert calls["n"] == 1  # traced once
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=1e-2, rtol=1e-2)
+
+
+def test_live_session_phases_and_ramp():
+    sess = LiveSession(n_layers=8, layer_bytes=100, link_bytes_per_s=100.0, started_at=0.0)
+    assert sess.layers_loaded(0.0) == 0
+    assert sess.throughput_multiplier(0.0) == 1.0
+    assert sess.phase is Phase.REDIRECT
+    m_half = sess.throughput_multiplier(4.0)  # 4 layers loaded
+    assert m_half == 2.0
+    assert sess.phase is Phase.COOPERATIVE
+    assert sess.throughput_multiplier(8.0) == 2.0
+    assert sess.phase is Phase.REBALANCED
+    assert sess.done_at() == pytest.approx(8.0)
+
+
+def test_select_live_pairs_uses_chain_tails():
+    topo = tp.add_host_sources(tp.make_cluster(3, 4))
+    topo.device(0).model = "m"
+    topo.device(0).role = tp.Role.DECODE
+    spares = [d.id for d in topo.spares()]
+    plan = mc.plan_multicast(topo, [0], spares, len(spares))
+    pairs = select_live_pairs(plan, overloaded=[0])
+    assert pairs
+    tails = {n.device_ids[0] for n in plan.live_scale_nodes}
+    for src, tgt in pairs:
+        assert src == 0 and tgt in tails
+    assert select_live_pairs(plan, [0], slo_requires_live=False) == []

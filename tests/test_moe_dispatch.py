@@ -1,0 +1,135 @@
+"""Oracle tests for the GShard one-hot einsum MoE dispatch (§Perf B2) and
+the int8 KV cache (§Perf C3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import moe
+from repro.models import transformer as TF
+
+
+def _moe_reference(params, x, cfg, group_size):
+    """Per-token Python reference with identical capacity semantics:
+    flattened (s, k) order per group, first-come-first-capacity drops."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    tokens = np.asarray(x.reshape(b * s, d), np.float32)
+    logits = tokens @ np.asarray(params["router"], np.float32)
+    probs = jax.nn.softmax(jnp.asarray(logits), axis=-1)
+    topk_p, topk_i = jax.lax.top_k(probs, k)
+    topk_p = np.asarray(topk_p / jnp.maximum(topk_p.sum(-1, keepdims=True), 1e-9))
+    topk_i = np.asarray(topk_i)
+
+    t = tokens.shape[0]
+    g_sz = min(group_size, t)
+    n_groups = -(-t // g_sz)
+    cap = max(int(np.ceil(cfg.capacity_factor * g_sz * k / e)), 1)
+
+    w_up = np.asarray(params["w_up"], np.float32)
+    w_gate = np.asarray(params["w_gate"], np.float32) if "w_gate" in params else None
+    w_down = np.asarray(params["w_down"], np.float32)
+
+    out = np.zeros_like(tokens)
+    for gi in range(n_groups):
+        counts = np.zeros(e, int)
+        for si in range(g_sz):
+            ti = gi * g_sz + si
+            if ti >= t:
+                break
+            for ki in range(k):
+                eid = topk_i[ti, ki]
+                if counts[eid] >= cap or topk_p[ti, ki] <= 0:
+                    counts[eid] += counts[eid] < cap  # position still consumed? no
+                    continue
+                counts[eid] += 1
+                h = tokens[ti] @ w_up[eid]
+                if w_gate is not None:
+                    gate = tokens[ti] @ w_gate[eid]
+                    h = (gate / (1 + np.exp(-gate))) * h  # silu(gate) * up
+                else:
+                    from scipy.special import erf  # pragma: no cover
+
+                    h = 0.5 * h * (1 + erf(h / np.sqrt(2)))
+                out[ti] += topk_p[ti, ki] * (h @ w_down[eid])
+    return out.reshape(b, s, d)
+
+
+def test_einsum_dispatch_matches_per_token_reference():
+    cfg = get_config("olmoe-1b-7b", reduced=True).replace(capacity_factor=8.0)
+    # high capacity factor -> no drops -> exact comparison
+    params_tree = TF.init_params(jax.random.PRNGKey(0), cfg)
+    lp = jax.tree.map(lambda p: p[0].astype(jnp.float32), params_tree["layers"])
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, cfg.d_model), jnp.float32)
+    got, aux = moe.moe_forward(lp["moe"], x, cfg, group_size=8)
+    want = _moe_reference(lp["moe"], x, cfg, group_size=8)
+    np.testing.assert_allclose(np.asarray(got), want, atol=2e-4, rtol=2e-3)
+
+
+def test_dispatch_capacity_drops_bounded():
+    """With capacity_factor < topk pressure, output stays finite and within
+    the convex hull scale of expert outputs (dropped tokens contribute 0)."""
+    cfg = get_config("olmoe-1b-7b", reduced=True).replace(capacity_factor=0.25)
+    params_tree = TF.init_params(jax.random.PRNGKey(0), cfg)
+    lp = jax.tree.map(lambda p: p[0], params_tree["layers"])
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 32, cfg.d_model), cfg.dtype)
+    out, aux = moe.moe_forward(lp["moe"], x, cfg, group_size=16)
+    assert bool(jnp.isfinite(out.astype(jnp.float32)).all())
+    assert float(aux) > 0
+
+
+def test_moe_group_size_config_used():
+    cfg = get_config("grok-1-314b")
+    assert cfg.moe_group_size == 512  # B4: unshardable expert axis
+
+
+# ---------------------------------------------------------------------------
+# int8 KV cache (§Perf C3)
+# ---------------------------------------------------------------------------
+
+
+def test_int8_kv_cache_matches_bf16_predictions():
+    cfg = get_config("granite-8b", reduced=True)
+    cfgq = cfg.replace(kv_quant=True)
+    params = TF.init_params(jax.random.PRNGKey(3), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(4), (2, 16), 0, cfg.vocab_size)
+
+    c = TF.init_caches(cfg, 2, 32)
+    n, c = TF.prefill(cfg, params, tokens, c)
+    cq = TF.init_caches(cfgq, 2, 32)
+    m, cq = TF.prefill(cfgq, params, tokens, cq)
+    assert cq["layers"]["k"].dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(n), np.asarray(m))
+    for _ in range(4):
+        n, c = TF.decode_step(cfg, params, n, c)
+        m, cq = TF.decode_step(cfgq, params, m, cq)
+    # greedy tokens may diverge after many steps; over 4 steps they agree
+    # on the reduced config (validated deterministically)
+    np.testing.assert_array_equal(np.asarray(n), np.asarray(m))
+
+
+def test_quantize_kv_roundtrip_error_bounded():
+    from repro.models.kvcache import quantize_kv
+
+    x = jax.random.normal(jax.random.PRNGKey(5), (4, 8, 64)) * 3.0
+    q, s = quantize_kv(x)
+    recon = q.astype(jnp.float32) * s[..., None]
+    err = jnp.max(jnp.abs(recon - x))
+    assert float(err) <= float(jnp.max(jnp.abs(x))) / 127.0 + 1e-6
+
+
+def test_uniform_append_matches_masked_append_when_lockstep():
+    """With equal lengths the scalar-DUS append and the masked-where append
+    are bit-identical."""
+    from repro.models.kvcache import append_kv, append_kv_uniform, init_kv_cache
+
+    cache = init_kv_cache(3, 16, 2, 8, jnp.float32)
+    cache["lengths"] = jnp.full((3,), 5, jnp.int32)
+    k_new = jax.random.normal(jax.random.PRNGKey(6), (3, 2, 8))
+    v_new = jax.random.normal(jax.random.PRNGKey(7), (3, 2, 8))
+    a = append_kv(dict(cache), k_new, v_new)
+    b = append_kv_uniform(dict(cache), k_new, v_new)
+    for key in ("k", "v", "lengths"):
+        np.testing.assert_array_equal(np.asarray(a[key]), np.asarray(b[key]))

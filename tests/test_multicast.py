@@ -1,0 +1,145 @@
+"""Hypothesis property tests for the Algorithm-11 multicast planner."""
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import multicast as mc
+from repro.core import topology as tp
+
+
+def _cluster(n_hosts, devs, bw=100.0, hosts_per_leaf=2):
+    topo = tp.make_cluster(n_hosts, devs, bw_gbps=bw, hosts_per_leaf=hosts_per_leaf)
+    return tp.add_host_sources(topo)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n_hosts=st.integers(2, 6),
+    devs=st.integers(2, 8),
+    n_src=st.integers(1, 4),
+    n_tgt_frac=st.floats(0.2, 1.0),
+)
+def test_plan_covers_each_target_exactly_once(n_hosts, devs, n_src, n_tgt_frac):
+    topo = _cluster(n_hosts, devs)
+    accel = [d.id for d in topo.devices if not d.is_host]
+    srcs = accel[:n_src]
+    for i in srcs:
+        topo.device(i).model = "m"
+        topo.device(i).role = tp.Role.DECODE  # egress free
+    spares = [d.id for d in topo.spares()]
+    n = max(1, int(len(spares) * n_tgt_frac))
+    plan = mc.plan_multicast(topo, srcs, spares, n)
+    assert len(plan.covered) == min(n, len(spares))
+    assert len(set(plan.covered)) == len(plan.covered)  # exactly once
+    assert set(plan.covered) <= set(spares)
+    assert mc.validate_plan(topo, plan) == []
+
+
+@settings(max_examples=40, deadline=None)
+@given(n_hosts=st.integers(2, 5), devs=st.integers(2, 8), seed=st.integers(0, 100))
+def test_interference_freedom(n_hosts, devs, seed):
+    """No multicast flow may share a direction with serving traffic, and no
+    link carries two same-direction multicast flows (full-duplex rule)."""
+    import random
+
+    rng = random.Random(seed)
+    topo = _cluster(n_hosts, devs)
+    accel = [d.id for d in topo.devices if not d.is_host]
+    srcs = []
+    for i in accel[: len(accel) // 2]:
+        role = rng.choice([tp.Role.PREFILL, tp.Role.DECODE])
+        topo.device(i).role = role
+        topo.device(i).model = "m"
+        srcs.append(i)
+    spares = [d.id for d in topo.spares()]
+    if not spares:
+        return
+    plan = mc.plan_multicast(topo, srcs, spares, len(spares))
+    assert mc.validate_plan(topo, plan) == []
+    # prefill sources (busy egress) must have been pruned
+    busy = {i for i in srcs if topo.device(i).egress_busy}
+    chain_sources = {
+        i for c in plan.chains for i in c.nodes[0].device_ids if c.nodes[0].is_source
+    }
+    assert not (chain_sources & busy)
+
+
+def test_chain_time_independent_of_receiver_count():
+    """Fig. 13a: pipelined serial chain time ~ |M|/B regardless of targets."""
+    model_bytes = 16_000_000_000
+    t1 = mc.chain_time_model(model_bytes, 100.0, 1)
+    t8 = mc.chain_time_model(model_bytes, 100.0, 8)
+    assert t1 == pytest.approx(t8)
+    # unpipelined store-and-forward scales linearly (the strawman)
+    t8_sf = mc.chain_time_model(model_bytes, 100.0, 8, pipelined=False)
+    assert t8_sf == pytest.approx(8 * t1)
+
+
+def test_plan_generation_under_40ms():
+    """Paper §5.2: plan generation must be online-fast (<40 ms) even for a
+    large cluster."""
+    topo = _cluster(32, 8)
+    accel = [d.id for d in topo.devices if not d.is_host]
+    for i in accel[:8]:
+        topo.device(i).model = "m"
+        topo.device(i).role = tp.Role.DECODE
+    spares = [d.id for d in topo.spares()]
+    plan = mc.plan_multicast(topo, accel[:8], spares, len(spares))
+    assert plan.gen_seconds < 0.040
+    assert mc.validate_plan(topo, plan) == []
+
+
+def test_multi_chain_per_leaf():
+    """Fig. 12: with sources in two leaves, the planner forms >=2 chains so
+    live scaling has more interference-free tails."""
+    topo = _cluster(4, 4, hosts_per_leaf=1)  # leaf per host
+    # one decode source in leaf 0 and one in leaf 2
+    for i in (0, 8):
+        topo.device(i).model = "m"
+        topo.device(i).role = tp.Role.DECODE
+    spares = [d.id for d in topo.spares()]
+    plan = mc.plan_multicast(topo, [0, 8], spares, len(spares))
+    assert len(plan.chains) >= 2
+    assert mc.validate_plan(topo, plan) == []
+    assert len(plan.live_scale_nodes) == len(plan.chains)
+
+
+def test_sharded_transfer_speedup():
+    """Fig. 14: a g-device source group to a g-device target group moves
+    1/g of the bytes per link -> g x effective bandwidth."""
+    topo = _cluster(2, 4)
+    for i in range(4):  # host 0 group = scale-up domain 0
+        topo.device(i).model = "m"
+        topo.device(i).role = tp.Role.DECODE
+    spares = [d.id for d in topo.spares()][:4]  # host 1 group
+    plan = mc.plan_multicast(topo, list(range(4)), spares, 4)
+    assert mc.validate_plan(topo, plan) == []
+    edge = plan.all_edges()[0]
+    assert edge.sharded_ways == 4
+    assert edge.bw_gbps == pytest.approx(4 * 100.0)
+
+
+def test_fastest_first_chain_order():
+    """Fig. 13b: within a leaf, higher-aggregate-bandwidth targets come
+    earlier (Algorithm 11 Line 3 orders leaves by the SOURCE leaf rank
+    first, so the cross-leaf order is intra-leaf-first, not global-bw)."""
+    topo = tp.make_cluster(3, 2, bw_gbps=100.0)
+    # host2's devices are faster (different leaf from the source)
+    for d in topo.devices:
+        if d.host == 2:
+            d.bw_gbps = 400.0
+    topo.device(0).model = "m"
+    topo.device(0).role = tp.Role.DECODE
+    spares = [d.id for d in topo.spares()]
+    plan = mc.plan_multicast(topo, [0], spares, len(spares))
+    by_leaf: dict[int, list[float]] = {}
+    order: list[int] = []
+    for c in plan.chains:
+        for n in c.targets:
+            by_leaf.setdefault(n.leaf, []).append(n.agg_bw_gbps)
+            if n.leaf not in order:
+                order.append(n.leaf)
+    for leaf, aggs in by_leaf.items():
+        assert aggs == sorted(aggs, reverse=True), (leaf, aggs)
+    assert order[0] == topo.device(0).leaf  # source leaf served first

@@ -1,0 +1,89 @@
+"""Global parameter pool: the O(1) host-cache invariant + fault tolerance."""
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import topology as tp
+from repro.core.parameter_pool import ParameterPool
+
+
+def _pool(n_hosts=4, devs=4):
+    topo = tp.make_cluster(n_hosts, devs)
+    return topo, ParameterPool(topo)
+
+
+def test_o1_host_cache_per_model():
+    """Each model occupies exactly ONE host cache slot cluster-wide (vs
+    ServerlessLLM's per-host caching — paper Fig. 19)."""
+    topo, pool = _pool()
+    for i in range(8):
+        pool.register(f"model-{i}", 10 * 2**30)
+    usage = pool.host_cache_bytes()
+    assert sum(usage.values()) == 8 * 10 * 2**30  # one copy per model total
+    # round-robin placement: max one more model than min per host
+    counts = [v // (10 * 2**30) for v in usage.values()]
+    assert max(counts) - min(counts) <= 1
+
+
+def test_deploy_reclaim_tracks_sources():
+    topo, pool = _pool()
+    pool.register("m", 1 << 30)
+    pool.deploy("m", [0, 1])
+    gpus, host = pool.sources("m")
+    assert gpus == [0, 1] and host is not None
+    assert pool.n_copies("m") == 3
+    pool.reclaim("m", [0, 1])
+    gpus, host = pool.sources("m")
+    assert gpus == [] and host is not None  # O(1) copy survives reclaim
+    assert pool.invariant_ok()
+
+
+def test_host_failure_rehomes_cached_copy():
+    topo, pool = _pool()
+    pool.register("m", 1 << 30)
+    victim = pool.models["m"].host_copy
+    rehomed = pool.fail_host(victim)
+    assert "m" in rehomed
+    assert pool.models["m"].host_copy != victim
+    assert pool.invariant_ok()
+
+
+def test_host_failure_drops_gpu_copies_on_that_host():
+    topo, pool = _pool()
+    pool.register("m", 1 << 30)
+    dev_host0 = [d.id for d in topo.devices if d.host == 0]
+    dev_host1 = [d.id for d in topo.devices if d.host == 1]
+    pool.deploy("m", dev_host0 + dev_host1[:1])
+    pool.fail_host(0)
+    gpus, _ = pool.sources("m")
+    assert set(gpus) == set(dev_host1[:1])
+    assert pool.invariant_ok()
+
+
+@settings(max_examples=40, deadline=None)
+@given(ops=st.lists(st.tuples(st.sampled_from(["reg", "dep", "rec", "fail", "recover"]),
+                              st.integers(0, 7)), max_size=30))
+def test_invariant_under_random_operations(ops):
+    """>=1 copy of every model survives any register/deploy/reclaim/failure
+    sequence as long as one host remains."""
+    topo, pool = _pool(n_hosts=4)
+    accel = [d.id for d in topo.devices]
+    failed = set()
+    for op, arg in ops:
+        if op == "reg":
+            pool.register(f"m{arg}", 1 << 20)
+        elif op == "dep" and pool.models:
+            name = sorted(pool.models)[arg % len(pool.models)]
+            pool.deploy(name, [accel[arg % len(accel)]])
+        elif op == "rec" and pool.models:
+            name = sorted(pool.models)[arg % len(pool.models)]
+            pool.reclaim(name, list(pool.models[name].gpu_devices)[:1])
+        elif op == "fail" and len(failed) < 3:
+            h = arg % 4
+            failed.add(h)
+            pool.fail_host(h)
+        elif op == "recover" and failed:
+            h = sorted(failed)[arg % len(failed)]
+            failed.discard(h)
+            pool.recover_host(h)
+        assert pool.invariant_ok()

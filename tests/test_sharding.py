@@ -1,0 +1,107 @@
+"""Logical-axis sharding substrate: shape-aware resolution properties."""
+
+import hypothesis.strategies as st
+import jax
+import pytest
+from hypothesis import given, settings
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as sh
+
+
+class _FakeMesh:
+    """Mesh stand-in: spec resolution only needs axis names + sizes."""
+
+    def __init__(self, sizes):
+        self.axis_names = tuple(sizes)
+        self._shape = tuple(sizes.values())
+
+    @property
+    def devices(self):
+        import numpy as np
+
+        return np.zeros(self._shape)
+
+
+MESH = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+RULES = sh.ShardingRules(MESH)
+
+
+def _axis_prod(spec_entry):
+    sizes = {"pod": 2, "data": 16, "model": 16}
+    if spec_entry is None:
+        return 1
+    if isinstance(spec_entry, str):
+        return sizes[spec_entry]
+    return int(__import__("numpy").prod([sizes[a] for a in spec_entry]))
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    dims=st.lists(st.integers(1, 4096), min_size=1, max_size=4),
+    axes=st.lists(
+        st.sampled_from(["batch", "heads", "d_ff", "vocab", "seq", None]),
+        min_size=1, max_size=4,
+    ),
+)
+def test_spec_for_shape_always_divides(dims, axes):
+    """Divisibility invariant: every resolved mesh-axis product divides its
+    tensor dim (pjit would reject anything else)."""
+    n = min(len(dims), len(axes))
+    dims, axes = dims[:n], axes[:n]
+    spec = RULES.spec_for_shape(tuple(dims), axes)
+    entries = list(spec) + [None] * (n - len(spec))
+    used = set()
+    for d, e in zip(dims, entries):
+        assert d % _axis_prod(e) == 0
+        if e is not None:
+            names = (e,) if isinstance(e, str) else tuple(e)
+            assert not (set(names) & used)  # no mesh axis reused
+            used.update(names)
+
+
+def test_spec_prefers_full_rule_when_divisible():
+    spec = RULES.spec_for_shape((256, 128), ("batch", "d_ff"))
+    assert spec == P(("pod", "data"), "model")
+
+
+def test_spec_drops_trailing_axes_until_divisible():
+    # batch 16 divides pod*data=32? No -> drop 'data': 16 % 2 == 0 -> ('pod',)
+    spec = RULES.spec_for_shape((16, 128), ("batch", "d_ff"))
+    assert spec[0] in ("pod", ("pod",))
+    # batch=1 (long_500k): fully replicated
+    spec1 = RULES.spec_for_shape((1, 128), ("batch", "d_ff"))
+    assert spec1[0] is None
+
+
+def test_spec_replicates_non_divisible_heads():
+    # 20 heads on a 16-way model axis -> replicate (qwen/whisper case)
+    spec = RULES.spec_for_shape((4096, 20, 128), ("d_model", "heads", "head_dim"))
+    assert len(spec) == 0 or all(e is None for e in spec)
+
+
+def test_overrides_merge():
+    r2 = RULES.with_overrides({"d_model": ("data",)})
+    spec = r2.spec_for_shape((4096, 14336), ("d_model", "d_ff"))
+    assert spec == P("data", "model")
+    # base rules unchanged
+    assert RULES.spec_for_shape((4096, 14336), ("d_model", "d_ff")) == P(None, "model")
+
+
+def test_no_mesh_is_noop():
+    r = sh.ShardingRules(None)
+    assert r.spec_for(("batch", "d_ff")) == P()
+
+
+def test_template_roundtrip():
+    t = {"w": sh.TensorSpec((64, 128), ("d_model", "d_ff"))}
+    params = sh.init_from_template(jax.random.PRNGKey(0), t)
+    assert params["w"].shape == (64, 128)
+    abstract = sh.abstract_from_template(t)
+    assert abstract["w"].shape == (64, 128)
+    specs = sh.specs_from_template(t, RULES)
+    assert specs["w"] == P(None, "model")
+    stacked = sh.stack_template(t, 4)
+    assert stacked["w"].shape == (4, 64, 128)
+    assert stacked["w"].axes[0] == "layers"
+    assert sh.param_count(t) == 64 * 128

@@ -1,0 +1,103 @@
+"""Cluster-simulator behaviour tests (the paper's evaluation methodology)."""
+
+import numpy as np
+import pytest
+
+from repro.core import simulator as sim
+from repro.serving import traces
+
+PROF = sim.profile_for("8b")
+
+
+def _trace(duration=60.0, rate=4.0, seed=0):
+    return traces.burstgpt(duration=duration, base_rate=rate, seed=seed)
+
+
+def test_conservation_every_request_completes():
+    """Every arriving request is prefillled and decodes to completion."""
+    tr = _trace(40.0, 3.0)
+    r = sim.run_system(sim.BLITZ, PROF, tr)
+    assert len(r.requests) == len(tr)
+    for req in r.requests:
+        assert req.prefill_done is not None
+        assert req.decoded >= req.output  # all tokens emitted
+
+
+def test_blitz_beats_ssd_scaling():
+    """Network multicast scaling must dominate SSD-only scaling on bursts."""
+    tr = _trace(60.0, 6.0)
+    blitz = sim.run_system(sim.BLITZ, PROF, tr)
+    ssd = sim.run_system(sim.SSD_ONLY, PROF, tr)
+    assert blitz.mean_ttft() <= ssd.mean_ttft()
+    assert blitz.p99_ttft() <= ssd.p99_ttft()
+
+
+def test_live_scaling_improves_queueing():
+    """Live cooperative execution drains queued requests during loading.
+    Compared over several bursty seeds (policy feedback can invert a single
+    run), live scaling must win on mean TTFT in aggregate."""
+    deltas = []
+    for seed in range(3):
+        tr = _trace(60.0, 10.0, seed=seed)
+        live = sim.run_system(sim.BLITZ, PROF, tr)
+        nolive = sim.run_system(sim.BLITZ_NOLIVE, PROF, tr)
+        deltas.append(nolive.mean_ttft() - live.mean_ttft())
+    assert sum(deltas) >= 0.0
+
+
+def test_o1_cache_vs_sllm_growth():
+    """Fig. 19: ServerlessLLM's host cache grows with hosts touched; Blitz
+    keeps O(1) (the simulator tracks S-LLM's per-host keepalive cache)."""
+    tr = _trace(60.0, 8.0)
+    sllm = sim.run_system(sim.SLLM, PROF, tr)
+    blitz = sim.run_system(sim.BLITZ, PROF, tr)
+    assert blitz.host_cache_total() <= PROF.param_bytes  # <= one copy
+    # S-LLM touches >= 1 host caches under bursts
+    assert sllm.host_cache_total() >= PROF.param_bytes
+
+
+def test_fixed_system_never_scales():
+    tr = _trace(30.0, 2.0)
+    r = sim.run_system(sim.fixed_system("fixed", 2, 2), PROF, tr)
+    assert r.scale_events == 0
+    assert all(n_p == 2 for _, n_p, _ in r.timeline)
+
+
+def test_scaling_stop_sweep_monotone():
+    """Fig. 3 methodology: longer scaling stops -> worse mean TTFT."""
+    tr = _trace(60.0, 6.0, seed=3)
+    ttfts = []
+    for delay in (0.1, 2.0, 12.8):
+        r = sim.run_system(sim.delay_system(delay), PROF, tr)
+        ttfts.append(r.mean_ttft())
+    assert ttfts[0] <= ttfts[1] <= ttfts[2]
+
+
+def test_gpu_time_accounting():
+    tr = _trace(30.0, 2.0)
+    r = sim.run_system(sim.BLITZ, PROF, tr)
+    assert r.gpu_time_s > 0
+    # autoscaled usage is below always-max provisioning
+    full = sim.run_system(sim.fixed_system("full", 16, 16), PROF, tr)
+    assert r.gpu_time_s < full.gpu_time_s
+
+
+def test_multicast_plan_used_for_batch_scales():
+    tr = _trace(60.0, 10.0, seed=5)
+    r = sim.run_system(sim.BLITZ, PROF, tr)
+    assert r.scale_events > 0
+    assert r.net_scale_bytes > 0
+
+
+@pytest.mark.parametrize("name", ["burstgpt", "azure_code", "azure_conv"])
+def test_traces_have_burst_structure(name):
+    tr = traces.TRACES[name](duration=120.0, seed=1)
+    assert len(tr) > 50
+    times = np.array([t for t, _, _ in tr])
+    # rate in 5s windows varies at least 3x (bursty by construction)
+    hist, _ = np.histogram(times, bins=int(120 / 5))
+    nonzero = hist[hist > 0]
+    # azure_conv is continuous surges (paper: "bursts continuously arrive"),
+    # so its peak/median ratio is lower than the isolated-burst traces
+    factor = 2.0 if name == "azure_conv" else 3.0
+    assert nonzero.max() >= factor * max(np.median(nonzero), 1)

@@ -1,0 +1,83 @@
+"""ZigZag scheduling: exact ILP solver properties + ILP-free rule quality."""
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import zigzag as zz
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 8), layers=st.integers(2, 10), time_l=st.floats(1.0, 12.0))
+def test_ilp_solution_satisfies_constraints(n, layers, time_l):
+    plan = zz.solve_pipeline_ilp(n, layers, time_l)
+    assert len(plan.configs) == n
+    pref_t, pref_s = 0, 0
+    for i, (t, s) in enumerate(plan.configs, start=1):
+        assert t + s == layers  # C1 pipeline limit
+        assert 0 <= t <= layers
+        if i > 1:
+            assert pref_t + t <= pref_s  # C2 pipeline dependency
+        if t > 0:
+            # C3 load limit (paper Fig. 15b reading — see zigzag.py note)
+            assert time_l * (t - 1) <= pref_t + (n - i + 1) * (t - 1) + 1e-6
+        pref_t += t
+        pref_s += s
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 8), layers=st.integers(2, 10), time_l=st.floats(1.0, 12.0))
+def test_ilp_beats_or_ties_all_source(n, layers, time_l):
+    """The optimal pipeline is never worse than running everything on the
+    overloaded source instance."""
+    plan = zz.solve_pipeline_ilp(n, layers, time_l)
+    base = zz.avg_latency_of([(0, layers)] * n)
+    assert plan.avg_latency <= base + 1e-9
+
+
+def test_paper_fig15_example():
+    """The worked example: 7-layer model, Time_l = 6, 7 requests.  ZigZag
+    completes request 7 by t=22 vs 32 for best-effort (paper Fig. 15)."""
+    n, layers, time_l = 7, 7, 6.0
+    be = zz.simulate_best_effort(n, layers, time_l)
+    zg = zz.simulate_zigzag(n, layers, time_l)
+    assert zg.avg_latency <= be.avg_latency
+    assert zg.makespan <= be.makespan
+    ilp = zz.solve_pipeline_ilp(n, layers, time_l)
+    assert ilp.avg_latency <= be.avg_latency
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 10), layers=st.integers(2, 12), time_l=st.floats(0.5, 10.0))
+def test_zigzag_not_worse_than_best_effort(n, layers, time_l):
+    be = zz.simulate_best_effort(n, layers, time_l)
+    zg = zz.simulate_zigzag(n, layers, time_l)
+    assert zg.avg_latency <= be.avg_latency + 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 10), layers=st.integers(2, 12), time_l=st.floats(0.5, 10.0))
+def test_schedules_complete_all_requests(n, layers, time_l):
+    for sim in (zz.simulate_zigzag, zz.simulate_best_effort):
+        r = sim(n, layers, time_l)
+        assert len(r.completion) == n
+        assert all(c > 0 for c in r.completion)
+        assert r.makespan == pytest.approx(max(r.completion))
+
+
+def test_live_throughput_multiplier():
+    """§4: throughput 1/L -> 2x ramp, peaking at half the layers."""
+    L = 8
+    assert zz.live_throughput_multiplier(0, L) == 1.0
+    assert zz.live_throughput_multiplier(L // 2, L) == 2.0
+    assert zz.live_throughput_multiplier(L, L) == 2.0
+    vals = [zz.live_throughput_multiplier(k, L) for k in range(L + 1)]
+    assert all(b >= a - 1e-9 for a, b in zip(vals, vals[1:]))  # monotone ramp
+    # the paper's 7-layer example: after 1 layer, source runs 6/7 of work
+    assert zz.live_throughput_multiplier(1, 7) == pytest.approx(7 / 6)
+
+
+def test_ilp_solve_time_small():
+    """Paper: <40 ms for Llama3-8B-sized problems (32 layers, ~12 batches)."""
+    plan = zz.solve_pipeline_ilp(12, 32, 6.0)
+    assert plan.solve_ms < 2_000  # generous CPU bound; paper reports 40 ms
