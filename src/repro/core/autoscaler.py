@@ -76,6 +76,7 @@ class LoadMonitor:
 class ScaleDecision:
     prefill_delta: int = 0  # +n scale up, -n scale down
     decode_delta: int = 0
+    prescaled: bool = False  # decode_delta came from the §5.4 forecast
     reason: str = ""
 
 
@@ -117,6 +118,7 @@ class Autoscaler:
                 dec_need = int(-(-(dec_load + load) // (p.upper_util * self.dec_cap)))
                 if dec_need > n_decode:
                     d.decode_delta = min(dec_need - n_decode, p.max_instances - n_decode)
+                    d.prescaled = True
 
         # ---- decode scale-up: KV-pressure based
         kv = self.decode_mon.avg_kv_frac()

@@ -25,10 +25,19 @@ def _auto(n: int):
     return (jax.sharding.AxisType.Auto,) * n
 
 
+def make_mesh_compat(shape, axes) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with explicit-Auto axis types where the installed
+    jax supports them (``AxisType`` landed after 0.4.x; older versions only
+    have auto axes, so omitting the kwarg is equivalent)."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(shape, axes, axis_types=_auto(len(shape)))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("pod", "data", "model")[1:]
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(shape)))
+    return make_mesh_compat(shape, axes)
 
 
 def make_host_mesh(model: int | None = None) -> jax.sharding.Mesh:
@@ -36,4 +45,4 @@ def make_host_mesh(model: int | None = None) -> jax.sharding.Mesh:
     n = len(jax.devices())
     model = model or 1
     assert n % model == 0
-    return jax.make_mesh((n // model, model), ("data", "model"), axis_types=_auto(2))
+    return make_mesh_compat((n // model, model), ("data", "model"))

@@ -1,0 +1,149 @@
+"""KV-cache migration channel: prefill→decode page transfer (paper §2.1, §5.4).
+
+A finished prefill freezes the request's KV pages (the 1-slot cache pytree
+the engine produced) and ships them to a decode instance over the scale-out
+network.  Transfer time is modelled at the topology's link bandwidth, page-
+granular like :class:`repro.models.kvcache.PagedKVCache` blocks.
+
+The channel models the *incast* effect that motivates §5.4's mutation
+policy: every flow entering a destination device shares that device's
+ingress link.  A decode instance that is simultaneously a live-scaling
+target (parameters streaming in) halves every migration headed to it —
+which is exactly why BlitzScale mutates an already-parameterised prefill
+instance into a decode instance instead of live-scaling decode directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.core import topology as topo_mod
+from repro.serving.engine import ServeRequest
+
+DEFAULT_PAGE_TOKENS = 16  # tokens per migrated KV page (block granularity)
+
+
+def payload_bytes(cache_one: Any, prompt_len: int, max_seq: int) -> int:
+    """Bytes of KV state a request of ``prompt_len`` tokens actually owns.
+
+    The 1-slot cache pytree is allocated at ``max_seq``; only the prompt
+    prefix carries information, so the migrated volume is the prompt-length
+    fraction of the leaf bytes.  Cache-layout agnostic (GQA / MLA / SSM
+    leaves all scale with their seq axis; constant-size SSM state is small
+    enough that the approximation is harmless)."""
+    total = sum(
+        leaf.size * leaf.dtype.itemsize
+        for leaf in jax.tree.leaves(cache_one)
+        if hasattr(leaf, "dtype")
+    )
+    return max(1, int(total * prompt_len / max(max_seq, 1)))
+
+
+@dataclasses.dataclass
+class MigrationPayload:
+    """One request's frozen KV pages in flight prefill→decode."""
+
+    rid: int
+    request: ServeRequest
+    first_token: int
+    cache_one: Any  # 1-slot cache pytree from InstanceEngine.prefill_only
+    prompt_len: int
+    total_bytes: int
+    n_pages: int
+    src_dev: int
+    dst_dev: int
+    # snapshot of the emitted tokens at freeze time — an independent COPY,
+    # so the resume-side gap check can detect the live request being decoded,
+    # truncated, or replayed while its KV pages were in flight
+    tokens_at_freeze: list[int] = dataclasses.field(default_factory=list)
+
+
+def make_payload(
+    req: ServeRequest,
+    first_token: int,
+    cache_one: Any,
+    *,
+    max_seq: int,
+    src_dev: int,
+    dst_dev: int,
+    page_tokens: int = DEFAULT_PAGE_TOKENS,
+) -> MigrationPayload:
+    prompt_len = int(len(req.prompt))
+    nbytes = payload_bytes(cache_one, prompt_len, max_seq)
+    n_pages = -(-prompt_len // page_tokens)  # ceil
+    return MigrationPayload(
+        rid=req.rid,
+        request=req,
+        first_token=first_token,
+        cache_one=cache_one,
+        prompt_len=prompt_len,
+        total_bytes=nbytes,
+        n_pages=n_pages,
+        src_dev=src_dev,
+        dst_dev=dst_dev,
+        tokens_at_freeze=list(req.out_tokens),
+    )
+
+
+@dataclasses.dataclass
+class _Flow:
+    payload: MigrationPayload
+    remaining: float  # bytes left
+    last_t: float
+
+
+class KVMigrationChannel:
+    """Models concurrent KV-page flows sharing per-device ingress links.
+
+    ``register_param_stream(dev)`` declares a live-scaling parameter stream
+    entering ``dev`` — it competes with migrations for the same ingress
+    (incast, §5.4).  ``poll(now)`` integrates progress with fair bandwidth
+    sharing and returns payloads that finished arriving."""
+
+    def __init__(self, topo: topo_mod.Topology):
+        self.topo = topo
+        self.flows: list[_Flow] = []
+        self._param_streams: dict[int, int] = {}  # dst device -> n streams
+
+    # -- incast bookkeeping -------------------------------------------------
+    def register_param_stream(self, dev: int) -> None:
+        self._param_streams[dev] = self._param_streams.get(dev, 0) + 1
+
+    def unregister_param_stream(self, dev: int) -> None:
+        n = self._param_streams.get(dev, 0) - 1
+        if n <= 0:
+            self._param_streams.pop(dev, None)
+        else:
+            self._param_streams[dev] = n
+
+    def ingress_flows(self, dev: int) -> int:
+        """Flows currently sharing ``dev``'s ingress link."""
+        mig = sum(1 for f in self.flows if f.payload.dst_dev == dev)
+        return mig + self._param_streams.get(dev, 0)
+
+    # -- transfer lifecycle -------------------------------------------------
+    def start(self, payload: MigrationPayload, now: float) -> None:
+        self.flows.append(_Flow(payload, float(payload.total_bytes), now))
+
+    def poll(self, now: float) -> list[MigrationPayload]:
+        """Advance all in-flight transfers to ``now``; return completions."""
+        done: list[MigrationPayload] = []
+        for f in self.flows:
+            dt = max(0.0, now - f.last_t)
+            f.last_t = now
+            if dt == 0.0 and f.remaining > 0:
+                continue
+            bw = topo_mod.gbps_to_bytes_per_s(
+                self.topo.link_bw(f.payload.src_dev, f.payload.dst_dev)
+            )
+            share = max(1, self.ingress_flows(f.payload.dst_dev))
+            f.remaining -= bw / share * dt
+        for f in list(self.flows):
+            if f.remaining <= 0:
+                self.flows.remove(f)
+                done.append(f.payload)
+        return done

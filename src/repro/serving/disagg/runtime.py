@@ -1,0 +1,357 @@
+"""PD-disaggregated cluster runtime: real engines + autoscaler + migration.
+
+This is the real-engine counterpart of the §5.4 policy that previously
+lived only in the discrete-event simulator: phase-tagged pools of
+:class:`InstanceEngine` serve prefill and decode separately; finished
+prefills freeze their KV pages and migrate them to a decode instance over
+the topology-modelled network; the :class:`Autoscaler` drives
+
+  * prefill scale-up by live-scaling spare devices (parameters stream at
+    the multicast plan's modelled bandwidth while the engine ramps
+    ``loaded_layers``);
+  * **decode pre-scaling** — a prefill surge forecasts a decode surge one
+    generation later, so decode capacity is raised in the same decision;
+  * **decode scale-up by mutation** — an active prefill instance flips to
+    decode in place (parameters already resident → zero parameter traffic,
+    no incast with KVCache migration) while a replacement prefill
+    live-scales on a spare device;
+  * scale-down by draining: the instance finishes in-flight work, takes
+    nothing new, and frees its device.
+
+Every forward pass is a real jitted model execution; time is supplied by
+the caller (wall clock in ``launch/serve.py``, virtual clock in tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+from repro.core import multicast as mc
+from repro.core import topology as topo_mod
+from repro.core.autoscaler import Autoscaler, LoadSample, PolicyConfig
+from repro.core.live_scaling import LiveSession
+from repro.core.parameter_pool import ParameterPool
+from repro.serving.disagg import pools as P
+from repro.serving.disagg.kv_migration import KVMigrationChannel, make_payload
+from repro.serving.engine import InstanceEngine, ServeRequest
+from repro.serving.router import Router
+
+
+@dataclasses.dataclass
+class RuntimeStats:
+    migrations: int = 0
+    migrated_bytes: int = 0
+    mutations: int = 0
+    mutation_param_bytes: int = 0  # stays 0 — that's the point of §5.4
+    live_scaled_prefill: int = 0
+    direct_decode_scales: int = 0  # fallback path (incast-prone)
+    live_scale_param_bytes: int = 0
+    prescaled_decodes: int = 0
+    scale_downs: int = 0
+    retired: int = 0
+
+
+class ClusterRuntime:
+    def __init__(
+        self,
+        cfg,
+        params,
+        *,
+        topo: topo_mod.Topology | None = None,
+        policy: PolicyConfig | None = None,
+        n_prefill: int = 1,
+        n_decode: int = 1,
+        n_slots: int = 4,
+        max_seq: int = 64,
+        prefill_capacity_tps: float = 1000.0,
+        decode_capacity_tps: float = 100.0,
+        model_bytes: int | None = None,
+        page_tokens: int = 16,
+        prefills_per_engine_per_tick: int = 1,
+        verbose: bool = False,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.page_tokens = page_tokens
+        self.prefills_per_tick = prefills_per_engine_per_tick
+        self.verbose = verbose
+
+        if topo is None:
+            topo = topo_mod.add_host_sources(topo_mod.make_cluster(2, 4, bw_gbps=100.0))
+        self.topo = topo
+        # model_bytes drives the *network model* (live-scale + migration
+        # sizing); callers may pass the full-architecture footprint while
+        # computing on a reduced config.
+        self.model_bytes = model_bytes or cfg.approx_params() * 2
+        self.param_pool = ParameterPool(topo)
+        self.param_pool.register(cfg.name, self.model_bytes)
+
+        self.pool = P.EnginePool(topo)
+        self.channel = KVMigrationChannel(topo)
+        self.router = Router()
+        self.autoscaler = Autoscaler(
+            policy or PolicyConfig(),
+            prefill_capacity_tps=prefill_capacity_tps,
+            decode_capacity_tps=decode_capacity_tps,
+        )
+        self.stats = RuntimeStats()
+        self._sreqs: dict[int, ServeRequest] = {}
+        self.completed: dict[int, ServeRequest] = {}
+        self._arrived_tokens = 0  # offered prefill load since last monitor tick
+        self._decoded_tokens = 0
+        self._last_mon: float | None = None
+
+        spare_ids = [d.id for d in topo.spares()]
+        if n_prefill + n_decode > len(spare_ids):
+            raise ValueError(
+                f"requested {n_prefill} prefill + {n_decode} decode instances "
+                f"but the topology has only {len(spare_ids)} spare devices"
+            )
+        spares = iter(spare_ids)
+        for phase, n in ((P.PREFILL, n_prefill), (P.DECODE, n_decode)):
+            for _ in range(n):
+                dev = next(spares)
+                self.pool.add(P.PooledEngine(self._new_engine(), dev, phase))
+                self.param_pool.deploy(cfg.name, [dev])
+
+    def _new_engine(self) -> InstanceEngine:
+        return InstanceEngine(
+            self.cfg, self.params, n_slots=self.n_slots, max_seq=self.max_seq
+        )
+
+    def _log(self, msg: str) -> None:
+        if self.verbose:
+            print(msg)
+
+    # -- request intake -----------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int, now: float) -> int:
+        rid = self.router.submit(len(prompt), max_new_tokens, now)
+        self._sreqs[rid] = ServeRequest(rid, np.asarray(prompt, np.int32), max_new_tokens)
+        self._arrived_tokens += len(prompt)
+        return rid
+
+    @property
+    def n_outstanding(self) -> int:
+        return len(self._sreqs) - len(self.completed)
+
+    # -- scaling actions ----------------------------------------------------
+    def _live_scale(self, phase: str, now: float) -> P.PooledEngine | None:
+        """Provision a spare device with a live-scaling engine: parameters
+        stream in at the multicast plan's modelled bandwidth while the engine
+        ramps ``loaded_layers`` from 0."""
+        spares = [d.id for d in self.topo.spares()]
+        if not spares:
+            return None
+        target = spares[0]
+        gpu_srcs, host = self.param_pool.sources(self.cfg.name)
+        host_devs = [
+            d.id for d in self.topo.devices if d.is_host and d.host == host
+        ]
+        srcs = gpu_srcs or host_devs
+        if not srcs:
+            return None
+        plan = mc.plan_multicast(self.topo, srcs, [target], 1)
+        t_load = max(plan.transfer_seconds(self.model_bytes), 1e-6)
+        session = LiveSession(
+            n_layers=self.cfg.n_layers,
+            layer_bytes=self.model_bytes // max(self.cfg.n_layers, 1),
+            link_bytes_per_s=self.model_bytes / t_load,
+            started_at=now,
+        )
+        eng = self._new_engine()
+        eng.set_loaded_layers(0)
+        pe = P.PooledEngine(eng, target, phase, state=P.LOADING, session=session)
+        self.pool.add(pe)
+        # reserve the device + declare the incoming parameter stream
+        self.topo.device(target).role = (
+            topo_mod.Role.DECODE if phase == P.DECODE else topo_mod.Role.PREFILL
+        )
+        self.channel.register_param_stream(target)
+        self.stats.live_scale_param_bytes += self.model_bytes
+        if phase == P.PREFILL:
+            self.stats.live_scaled_prefill += 1
+        else:
+            self.stats.direct_decode_scales += 1
+        self._log(
+            f"[scale] live-scaling {phase} on dev {target} "
+            f"({self.model_bytes/1e6:.0f} MB over {t_load*1e3:.0f} ms modelled)"
+        )
+        return pe
+
+    def _scale_up_decode(self, now: float) -> bool:
+        """§5.4: prefer mutating a prefill instance (zero parameter traffic,
+        no incast with KV migration) and live-scale a replacement prefill;
+        fall back to a direct decode live-scale only when no prefill can be
+        spared.  Returns False when neither path had resources."""
+        prefills = self.pool.serving(P.PREFILL)
+        can_mutate = prefills and (
+            self.pool.n_provisioned(P.PREFILL) >= 2 or self.topo.spares()
+        )
+        if can_mutate:
+            victim = min(prefills, key=P.PooledEngine.load)
+            self.pool.mutate_to_decode(victim)
+            self.stats.mutations += 1
+            self._log(f"[scale] mutated prefill dev {victim.device_id} -> decode (0 param bytes)")
+            self._live_scale(P.PREFILL, now)  # replacement; may be None if no spare
+            return True
+        return self._live_scale(P.DECODE, now) is not None
+
+    def _scale_down(self, phase: str, now: float) -> None:
+        cands = self.pool.serving(phase)
+        if len(cands) <= 1:
+            return
+        victim = min(cands, key=P.PooledEngine.load)
+        self.pool.drain(victim)
+        self.stats.scale_downs += 1
+        self._log(f"[scale] draining {phase} dev {victim.device_id}")
+
+    # -- main loop ----------------------------------------------------------
+    def tick(self, now: float) -> list[int]:
+        """One runtime iteration; returns rids completed this tick."""
+        # 0. retire drained instances; free their devices (idle() holds
+        #    retirement while KV migrations are still in flight toward one)
+        for pe in self.pool.retire_idle():
+            self.param_pool.reclaim(self.cfg.name, [pe.device_id])
+            self.stats.retired += 1
+            self._log(f"[scale] retired {pe.phase} dev {pe.device_id}")
+
+        # 1. advance live-scaling sessions
+        for pe in self.pool.all():
+            if pe.state == P.LOADING and pe.session is not None:
+                pe.engine.set_loaded_layers(pe.session.layers_loaded(now))
+                if pe.engine.can_serve_alone():
+                    self.pool.activate(pe)
+                    self.channel.unregister_param_stream(pe.device_id)
+                    self.param_pool.deploy(self.cfg.name, [pe.device_id])
+                    self._log(f"[scale] dev {pe.device_id} fully loaded -> active {pe.phase}")
+
+        # 2. dispatch prefills (bounded per engine per tick) + start migrations
+        budget = {
+            id(pe): self.prefills_per_tick for pe in self.pool.serving(P.PREFILL)
+        }
+        while self.router.queue:
+            targets = self.pool.migration_targets()
+            dst = min(targets, key=P.PooledEngine.load) if targets else None
+            src_cands = [
+                pe for pe in self.pool.serving(P.PREFILL) if budget.get(id(pe), 0) > 0
+            ]
+            if dst is None or not src_cands:
+                break
+            src = min(src_cands, key=P.PooledEngine.load)
+            budget[id(src)] -= 1
+            rec = self.router.queue.popleft()
+            sreq = self._sreqs[rec.rid]
+            first, one = src.engine.prefill_only(sreq)
+            self.router.note_first_token(rec.rid, now)
+            payload = make_payload(
+                sreq,
+                first,
+                one,
+                max_seq=self.max_seq,
+                src_dev=src.device_id,
+                dst_dev=dst.device_id,
+                page_tokens=self.page_tokens,
+            )
+            self.router.begin_handoff(
+                rec.rid, src.device_id, dst.device_id, len(sreq.out_tokens), now
+            )
+            self.channel.start(payload, now)
+            self.router.mark_migrating(rec.rid)
+            dst.inflight += 1
+            self.stats.migrations += 1
+            self.stats.migrated_bytes += payload.total_bytes
+
+        # 3. migration completions land on their decode instance
+        by_dev = {pe.device_id: pe for pe in self.pool.all()}
+        for payload in self.channel.poll(now):
+            pe = by_dev[payload.dst_dev]
+            pe.inflight -= 1
+            pe.pending.append(payload)
+
+        # 4. decode: admit migrated requests, then one batched step per engine
+        finished_rids: list[int] = []
+        for pe in self.pool.phase(P.DECODE):
+            eng = pe.engine
+            if not eng.can_serve_alone():
+                continue
+            while pe.pending and eng.free_slots:
+                p = pe.pending.popleft()
+                eng.admit_prefilled(p.request, p.first_token, p.cache_one)
+                # compare against the independent freeze-time snapshot: the
+                # request must resume with exactly the tokens it froze with
+                # (nothing decoded, lost, or replayed while in transit)
+                resumed = (
+                    len(p.request.out_tokens)
+                    if p.request.out_tokens == p.tokens_at_freeze
+                    else -1
+                )
+                self.router.complete_handoff(p.rid, resumed, now)
+            if not eng.active:
+                continue
+            rids = [r.rid for r in eng.active.values()]
+            done = eng.step()
+            self._decoded_tokens += len(rids)
+            for rid in rids:
+                self.router.note_token(rid, now)
+            for r in done:
+                self.router.note_done(r.rid)
+                self.completed[r.rid] = r
+                finished_rids.append(r.rid)
+
+        # 5. feed the load monitors + run the scaling policy
+        if self._last_mon is None:
+            self._last_mon = now
+        dt = now - self._last_mon
+        if dt > 0:
+            decode_kv = max(
+                (pe.engine.kv_used_frac() for pe in self.pool.serving(P.DECODE)),
+                default=0.0,
+            )
+            self.autoscaler.prefill_mon.record(
+                LoadSample(now, self._arrived_tokens / dt, 0.0, len(self.router.queue))
+            )
+            self.autoscaler.decode_mon.record(
+                LoadSample(now, self._decoded_tokens / dt, decode_kv, 0)
+            )
+            self._arrived_tokens = 0
+            self._decoded_tokens = 0
+            self._last_mon = now
+            decision = self.autoscaler.decide(
+                now,
+                self.pool.n_provisioned(P.PREFILL),
+                self.pool.n_provisioned(P.DECODE),
+            )
+            for _ in range(max(0, decision.prefill_delta)):
+                if self._live_scale(P.PREFILL, now) is None:
+                    break
+            performed = 0
+            for _ in range(max(0, decision.decode_delta)):
+                if not self._scale_up_decode(now):
+                    break
+                performed += 1
+            if decision.prescaled and performed:
+                # these decode instances were raised by the §5.4 forecast
+                # (prefill surge), not by observed decode pressure
+                self.stats.prescaled_decodes += performed
+            if decision.prefill_delta < 0:
+                self._scale_down(P.PREFILL, now)
+            if decision.decode_delta < 0:
+                self._scale_down(P.DECODE, now)
+
+        return finished_rids
+
+    # -- convenience --------------------------------------------------------
+    def run_until_done(self, clock, *, max_ticks: int = 100_000) -> bool:
+        """Drive ticks until every submitted request completed.  ``clock``
+        is a zero-arg callable returning the current time.  Returns False
+        when the tick budget ran out with requests still outstanding."""
+        for _ in range(max_ticks):
+            if self.n_outstanding == 0:
+                return True
+            self.tick(clock())
+        return self.n_outstanding == 0

@@ -99,24 +99,62 @@ class InstanceEngine:
     def submit(self, req: ServeRequest) -> None:
         self.queue.append(req)
 
+    def _splice_slot(self, slot: int, one: Any, first_token: int) -> None:
+        """Install a 1-slot prefill cache + its first sampled token into
+        ``slot``.  Shared by local admission and disagg KV-migration admission
+        so both paths are numerically identical."""
+
+        def splice(old, new):
+            if old.ndim >= 2 and old.shape[1] == self.n_slots:
+                return old.at[:, slot].set(new[:, 0])
+            return old
+
+        self.caches = jax.tree.map(splice, self.caches, one)
+        self.last_tokens = self.last_tokens.at[slot].set(int(first_token))
+        self.slot_live = self.slot_live.at[slot].set(True)
+
     def _admit(self) -> None:
         while self.queue and self.free_slots:
             req = self.queue.popleft()
             slot = self.free_slots.pop()
             req.slot = slot
-            tokens = jnp.asarray(req.prompt[None].astype(np.int32))
-            nxt, one = self._prefill_one(self.params, tokens)
-
-            def splice(old, new):
-                if old.ndim >= 2 and old.shape[1] == self.n_slots:
-                    return old.at[:, slot].set(new[:, 0])
-                return old
-
-            self.caches = jax.tree.map(splice, self.caches, one)
-            self.last_tokens = self.last_tokens.at[slot].set(int(nxt[0]))
-            self.slot_live = self.slot_live.at[slot].set(True)
-            req.out_tokens.append(int(nxt[0]))
+            nxt, one = self.prefill_only(req)
+            self._splice_slot(slot, one, nxt)
             self.active[slot] = req
+
+    # -- disaggregated-serving entry points --------------------------------------
+    def prefill_only(self, req: ServeRequest) -> tuple[int, Any]:
+        """Run the prefill phase only: returns (first_token, 1-slot cache).
+
+        On a prefill instance this is the whole job — the returned cache is
+        the KV-migration payload; the first token is emitted here (TTFT is a
+        prefill-side metric in PD disaggregation)."""
+        tokens = jnp.asarray(req.prompt[None].astype(np.int32))
+        nxt, one = self._prefill_one(self.params, tokens)
+        first = int(nxt[0])
+        req.out_tokens.append(first)
+        return first, one
+
+    def admit_prefilled(self, req: ServeRequest, first_token: int, one: Any) -> bool:
+        """Admit a request whose prefill ran elsewhere (KV cache migrated in).
+
+        Returns False when no decode slot is free — the caller keeps the
+        payload queued.  The splice is the same op local admission uses, so
+        decode continues bit-identically from the migrated state."""
+        if not self.free_slots:
+            return False
+        slot = self.free_slots.pop()
+        req.slot = slot
+        self._splice_slot(slot, one, first_token)
+        self.active[slot] = req
+        return True
+
+    def kv_used_frac(self) -> float:
+        """Fraction of KV capacity held by live sequences (autoscaler signal)."""
+        used = sum(
+            len(r.prompt) + len(r.out_tokens) for r in self.active.values()
+        )
+        return used / float(self.n_slots * self.max_seq)
 
     def step(self) -> list[ServeRequest]:
         """One continuous-batching iteration; returns finished requests."""

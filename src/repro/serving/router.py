@@ -9,16 +9,50 @@ its work arrives via the paired source's shared priority queue.
 
 SLO accounting matches the paper's §6.2 definition: a request violates when
 TTFT or any TBT exceeds 5x the workload's average.
+
+For PD-disaggregated serving the router additionally owns the three-step
+transition handoff of a migrating request (mirroring the live-scaling
+protocol of §5.2, applied to prefill→decode KV migration):
+
+  1. PREFILLED — the prefill instance emitted the first token and froze the
+                 request's KV pages; the router pins the request (no engine
+                 may decode it);
+  2. MIGRATING — pages are in flight on the compute network; the first
+                 token is already accounted, so nothing is dropped while
+                 the request is in transit;
+  3. RESUMED   — the decode instance spliced the pages and continues from
+                 the exact migrated position.
+
+``complete_handoff`` verifies the resume position equals the freeze
+position — a migrating request must never drop or duplicate tokens.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import enum
 import time
 from collections import deque
 from typing import Any
 
 import numpy as np
+
+
+class HandoffPhase(enum.Enum):
+    PREFILLED = "prefilled"
+    MIGRATING = "migrating"
+    RESUMED = "resumed"
+
+
+@dataclasses.dataclass
+class Handoff:
+    rid: int
+    src: int  # prefill instance/device id
+    dst: int  # decode instance/device id
+    tokens_frozen: int  # tokens emitted when the KV pages were frozen
+    phase: HandoffPhase = HandoffPhase.PREFILLED
+    t_begin: float = 0.0
+    t_resume: float | None = None
 
 
 @dataclasses.dataclass
@@ -53,6 +87,8 @@ class Router:
     def __init__(self):
         self.queue: deque[RequestRecord] = deque()
         self.records: dict[int, RequestRecord] = {}
+        self.handoffs: dict[int, Handoff] = {}
+        self.dropped: list[int] = []  # rids that lost/duplicated tokens in transit
         self._rid = 0
 
     def submit(self, prompt_tokens: int, max_new_tokens: int, now: float) -> int:
@@ -65,14 +101,62 @@ class Router:
     def dispatch(self, engines: list[Any]) -> list[tuple[RequestRecord, Any]]:
         """Assign queued requests FCFS to the least-loaded serving-capable
         engine.  Engines mid-live-scaling (can_serve_alone() False) are
-        skipped — their work arrives via cooperative execution."""
+        skipped — their work arrives via cooperative execution.  Requests
+        pinned by an open handoff (KV pages frozen or in flight) are never
+        dispatched."""
         ready = [e for e in engines if getattr(e, "can_serve_alone", lambda: True)()]
         out = []
+        deferred = []
         while self.queue and ready:
-            eng = min(ready, key=lambda e: len(getattr(e, "queue", [])) + len(getattr(e, "active", {})))
             rec = self.queue.popleft()
+            if self.pinned(rec.rid):
+                deferred.append(rec)
+                continue
+            eng = min(ready, key=lambda e: len(getattr(e, "queue", [])) + len(getattr(e, "active", {})))
             out.append((rec, eng))
+        self.queue.extendleft(reversed(deferred))
         return out
+
+    # -- three-step PD handoff ----------------------------------------------
+    def begin_handoff(
+        self, rid: int, src: int, dst: int, tokens_frozen: int, now: float
+    ) -> Handoff:
+        """Step 1: freeze the request's KV pages on the prefill instance.
+        While a handoff is open (PREFILLED or MIGRATING) the request is
+        pinned — ``dispatch`` will never hand it to an engine."""
+        h = Handoff(rid, src, dst, tokens_frozen, HandoffPhase.PREFILLED, t_begin=now)
+        self.handoffs[rid] = h
+        return h
+
+    def mark_migrating(self, rid: int) -> None:
+        """Step 2: the frozen pages entered the network toward ``dst``."""
+        self.handoffs[rid].phase = HandoffPhase.MIGRATING
+
+    def complete_handoff(self, rid: int, tokens_resumed: int, now: float) -> bool:
+        """Step 3: the decode instance spliced the pages and resumes.  Returns
+        True when the resume position matches the freeze position (no token
+        dropped or replayed); mismatches are recorded in ``dropped``."""
+        h = self.handoffs[rid]
+        h.phase = HandoffPhase.RESUMED
+        h.t_resume = now
+        ok = tokens_resumed == h.tokens_frozen
+        if not ok:
+            self.dropped.append(rid)
+        return ok
+
+    def in_transit(self, rid: int) -> bool:
+        h = self.handoffs.get(rid)
+        return h is not None and h.phase is HandoffPhase.MIGRATING
+
+    def pinned(self, rid: int) -> bool:
+        """True while a handoff is open (not yet RESUMED)."""
+        h = self.handoffs.get(rid)
+        return h is not None and h.phase is not HandoffPhase.RESUMED
+
+    def handoff_report(self) -> tuple[int, int]:
+        """(completed handoffs, token-gapped requests)."""
+        done = sum(1 for h in self.handoffs.values() if h.phase is HandoffPhase.RESUMED)
+        return done, len(self.dropped)
 
     # -- SLO accounting ------------------------------------------------------
     def note_first_token(self, rid: int, now: float) -> None:

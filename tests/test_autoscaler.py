@@ -1,0 +1,100 @@
+"""Autoscaler policy: scale-down timeout hysteresis + §5.4 decode pre-scaling."""
+
+import pytest
+
+from repro.core.autoscaler import Autoscaler, LoadSample, PolicyConfig
+
+
+def _scaler(**kw):
+    kw.setdefault("scale_down_timeout_s", 1.0)
+    kw.setdefault("monitor_window_s", 10.0)  # keep samples alive across decides
+    return Autoscaler(
+        PolicyConfig(**kw), prefill_capacity_tps=100.0, decode_capacity_tps=100.0
+    )
+
+
+def _feed(sc, t, prefill_tps=0.0, decode_tps=0.0, kv=0.0):
+    sc.prefill_mon.record(LoadSample(t, prefill_tps, 0.0, 0))
+    sc.decode_mon.record(LoadSample(t, decode_tps, kv, 0))
+
+
+# ---------------------------------------------------------------------------
+# scale-down timeout hysteresis
+# ---------------------------------------------------------------------------
+
+
+def test_scale_down_waits_for_timeout():
+    sc = _scaler()
+    _feed(sc, 0.0, prefill_tps=5.0)  # far below lower bound with 2 instances
+    assert sc.decide(0.0, n_prefill=2, n_decode=1).prefill_delta == 0  # timer arms
+    _feed(sc, 0.5, prefill_tps=5.0)
+    assert sc.decide(0.5, 2, 1).prefill_delta == 0  # 0.5s < 1.0s timeout
+    _feed(sc, 1.1, prefill_tps=5.0)
+    assert sc.decide(1.1, 2, 1).prefill_delta == -1  # timeout elapsed
+
+
+def test_scale_down_timer_resets_on_load_blip():
+    sc = _scaler()
+    _feed(sc, 0.0, prefill_tps=5.0)
+    sc.decide(0.0, 2, 1)  # arms at t=0
+    _feed(sc, 0.8, prefill_tps=500.0)  # blip above the lower bound
+    d = sc.decide(0.8, 2, 1)
+    assert d.prefill_delta >= 0  # no scale-down
+    # back to quiet: the timer must restart, not resume
+    sc.prefill_mon.samples.clear()
+    _feed(sc, 1.2, prefill_tps=5.0)
+    assert sc.decide(1.2, 2, 1).prefill_delta == 0
+    _feed(sc, 2.3, prefill_tps=5.0)
+    assert sc.decide(2.3, 2, 1).prefill_delta == -1
+
+
+def test_scale_down_rearms_after_firing():
+    """After one -1 the timer restarts: no immediate second scale-down."""
+    sc = _scaler()
+    _feed(sc, 0.0, prefill_tps=5.0)
+    sc.decide(0.0, 3, 1)
+    _feed(sc, 1.1, prefill_tps=5.0)
+    assert sc.decide(1.1, 3, 1).prefill_delta == -1
+    _feed(sc, 1.2, prefill_tps=5.0)
+    assert sc.decide(1.2, 2, 1).prefill_delta == 0  # rearmed, not repeated
+    _feed(sc, 2.3, prefill_tps=5.0)
+    assert sc.decide(2.3, 2, 1).prefill_delta == -1
+
+
+def test_no_scale_down_below_one_instance():
+    sc = _scaler()
+    for t in (0.0, 1.1, 2.2):
+        _feed(sc, t, prefill_tps=0.0, decode_tps=0.0)
+        d = sc.decide(t, 1, 1)
+        assert d.prefill_delta == 0 and d.decode_delta == 0
+
+
+# ---------------------------------------------------------------------------
+# scale-up + §5.4 decode pre-scaling
+# ---------------------------------------------------------------------------
+
+
+def test_prefill_surge_prescales_decode():
+    sc = _scaler()
+    _feed(sc, 0.0, prefill_tps=1000.0)  # 10x one instance's capacity
+    d = sc.decide(0.0, n_prefill=1, n_decode=1)
+    assert d.prefill_delta > 0
+    assert d.decode_delta > 0  # raised by the forecast, not observed load
+    assert d.prescaled  # and flagged as such
+
+
+def test_prescale_disabled_leaves_decode_alone():
+    sc = _scaler(decode_prescale=False)
+    _feed(sc, 0.0, prefill_tps=1000.0)
+    d = sc.decide(0.0, 1, 1)
+    assert d.prefill_delta > 0
+    assert d.decode_delta == 0
+
+
+def test_kv_pressure_scales_decode():
+    sc = _scaler(kv_upper=0.9)
+    _feed(sc, 0.0, kv=0.95)
+    d = sc.decide(0.0, 1, 1)
+    assert d.decode_delta == 1
+    assert not d.prescaled  # pressure-driven, not a forecast
+    assert "KV" in d.reason

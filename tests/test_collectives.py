@@ -31,9 +31,9 @@ def test_chain_broadcast_delivers_to_all_ranks():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import Mesh
         from repro.core.collectives import chain_broadcast
+        from repro.launch.mesh import make_mesh_compat
 
-        mesh = jax.make_mesh((8,), ("chain",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh_compat((8,), ("chain",))
         params = jnp.arange(1000, dtype=jnp.float32)
         out = chain_broadcast(params, mesh, "chain", n_blocks=4)
         np.testing.assert_allclose(np.asarray(out), np.arange(1000))
@@ -66,9 +66,9 @@ def test_sharded_group_transfer_allgather():
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
         from repro.core.collectives import sharded_group_transfer
+        from repro.launch.mesh import make_mesh_compat
 
-        mesh = jax.make_mesh((2, 4), ("chain", "scaleup"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh_compat((2, 4), ("chain", "scaleup"))
         full = jnp.arange(64, dtype=jnp.float32)
 
         @functools.partial(shard_map, mesh=mesh,

@@ -1,0 +1,236 @@
+"""PD-disaggregated runtime: KV migration numerics + §5.4 policy paths."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import topology as tp
+from repro.core.autoscaler import PolicyConfig
+from repro.models import transformer as TF
+from repro.serving.disagg import ClusterRuntime, KVMigrationChannel
+from repro.serving.disagg import pools as P
+from repro.serving.disagg.kv_migration import MigrationPayload, payload_bytes
+from repro.serving.engine import InstanceEngine, ServeRequest
+
+CFG = get_config("granite-8b", reduced=True)
+PARAMS = TF.init_params(jax.random.PRNGKey(0), CFG)
+
+
+def _engine(n_slots=2, max_seq=32):
+    return InstanceEngine(CFG, PARAMS, n_slots=n_slots, max_seq=max_seq)
+
+
+def _runtime(**kw):
+    kw.setdefault("topo", tp.add_host_sources(tp.make_cluster(2, 4, bw_gbps=100.0)))
+    kw.setdefault(
+        "policy", PolicyConfig(max_instances=4, kv_upper=0.5, scale_down_timeout_s=0.4)
+    )
+    kw.setdefault("n_prefill", 2)
+    kw.setdefault("n_decode", 1)
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_seq", 48)
+    kw.setdefault("prefill_capacity_tps", 200.0)
+    kw.setdefault("decode_capacity_tps", 50.0)
+    kw.setdefault("model_bytes", int(50e6))
+    return ClusterRuntime(CFG, PARAMS, **kw)
+
+
+# ---------------------------------------------------------------------------
+# KV migration correctness
+# ---------------------------------------------------------------------------
+
+
+def test_migrated_decode_matches_colocated():
+    """Prefill on engine A, migrate KV, decode on engine B == one engine."""
+    prompt = (np.arange(9) % CFG.vocab_size).astype(np.int32)
+
+    colo = _engine()
+    colo.submit(ServeRequest(1, prompt, 6))
+    (ref,) = colo.run_until_done()
+
+    pre, dec = _engine(), _engine()
+    req = ServeRequest(1, prompt, 6)
+    first, one = pre.prefill_only(req)
+    assert dec.admit_prefilled(req, first, one)
+    for _ in range(50):
+        dec.step()
+        if req.done:
+            break
+    assert req.done
+    assert req.out_tokens == ref.out_tokens  # bit-identical continuation
+
+
+def test_runtime_tokens_match_colocated_reference():
+    """Every request served through the full disagg runtime (pools +
+    migration channel + handoff) decodes the same tokens as a lone engine."""
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, CFG.vocab_size, size=7).astype(np.int32) for _ in range(4)]
+
+    rt = _runtime()
+    t = 0.0
+    rids = [rt.submit(p, 5, t) for p in prompts]
+    for _ in range(500):
+        if rt.n_outstanding == 0:
+            break
+        t += 0.01
+        rt.tick(t)
+    assert rt.n_outstanding == 0
+
+    ref_eng = _engine(n_slots=1)
+    for rid, prompt in zip(rids, prompts):
+        ref_eng.submit(ServeRequest(100 + rid, prompt, 5))
+        (ref,) = ref_eng.run_until_done()
+        assert rt.completed[rid].out_tokens == ref.out_tokens
+
+
+def test_no_dropped_or_gapped_tokens():
+    rt = _runtime()
+    rng = np.random.default_rng(1)
+    t = 0.0
+    n = 6
+    for _ in range(n):
+        rt.submit(rng.integers(0, CFG.vocab_size, size=8).astype(np.int32), 4, t)
+    for _ in range(500):
+        if rt.n_outstanding == 0:
+            break
+        t += 0.01
+        rt.tick(t)
+    assert rt.n_outstanding == 0
+    handoffs, gapped = rt.router.handoff_report()
+    assert handoffs == rt.stats.migrations == n
+    assert gapped == 0
+    for r in rt.completed.values():
+        assert len(r.out_tokens) == r.max_new_tokens  # contiguous, no gaps
+
+
+def test_payload_bytes_scales_with_prompt():
+    one = TF.init_caches(CFG, 1, 32)
+    b8, b16 = payload_bytes(one, 8, 32), payload_bytes(one, 16, 32)
+    assert 0 < b8 < b16
+    assert b16 == pytest.approx(2 * b8, rel=0.01)
+
+
+# ---------------------------------------------------------------------------
+# Migration channel: topology bandwidth + incast
+# ---------------------------------------------------------------------------
+
+
+def _payload(nbytes, src=0, dst=1, rid=1):
+    return MigrationPayload(
+        rid=rid, request=None, first_token=0, cache_one=None, prompt_len=16,
+        total_bytes=nbytes, n_pages=1, src_dev=src, dst_dev=dst,
+    )
+
+
+def test_channel_transfers_at_link_bandwidth():
+    topo = tp.make_cluster(1, 2, bw_gbps=8.0)  # 1e9 bytes/s links
+    ch = KVMigrationChannel(topo)
+    ch.start(_payload(int(1e9)), now=0.0)
+    assert ch.poll(0.5) == []  # half transferred
+    done = ch.poll(1.01)
+    assert [p.rid for p in done] == [1]
+
+
+def test_incast_param_stream_halves_migration_bandwidth():
+    """A live-scaling parameter stream into the destination shares its
+    ingress link — the §5.4 motivation for mutation over direct scaling."""
+    topo = tp.make_cluster(1, 2, bw_gbps=8.0)
+    ch = KVMigrationChannel(topo)
+    ch.register_param_stream(1)
+    ch.start(_payload(int(1e9)), now=0.0)
+    assert ch.poll(1.01) == []  # would have finished without the incast
+    assert ch.poll(2.01) != []
+    ch.unregister_param_stream(1)
+    assert ch.ingress_flows(1) == 0
+
+
+# ---------------------------------------------------------------------------
+# §5.4 policy: mutation, pre-scaling wiring, drain/retire
+# ---------------------------------------------------------------------------
+
+
+def test_loading_decode_is_a_migration_target():
+    """A directly live-scaled decode instance must receive migrations while
+    its parameters stream in — that shared ingress is the §5.4 incast the
+    mutation policy avoids, so it has to be reachable to be modelled."""
+    topo = tp.add_host_sources(tp.make_cluster(1, 2, bw_gbps=100.0))
+    pool = P.EnginePool(topo)
+    eng = _engine()
+    eng.set_loaded_layers(0)
+    pe = pool.add(P.PooledEngine(eng, 0, P.DECODE, state=P.LOADING))
+    assert pool.serving(P.DECODE) == []  # cannot serve yet
+    assert pool.migration_targets() == [pe]  # but KV pages may route to it
+
+
+def test_decode_pressure_mutates_prefill_and_live_scales_replacement():
+    rt = _runtime(n_slots=2)  # tiny decode KV -> pressure builds fast
+    rng = np.random.default_rng(2)
+    t = 0.0
+    for _ in range(8):
+        rt.submit(rng.integers(0, CFG.vocab_size, size=16).astype(np.int32), 6, t)
+    saw_loading = False
+    for _ in range(800):
+        if rt.n_outstanding == 0:
+            break
+        t += 0.01
+        rt.tick(t)
+        saw_loading = saw_loading or any(
+            pe.state == P.LOADING and pe.phase == P.PREFILL for pe in rt.pool.all()
+        )
+    assert rt.n_outstanding == 0
+    assert rt.stats.mutations >= 1  # prefill flipped to decode in place ...
+    assert rt.stats.mutation_param_bytes == 0  # ... moving zero parameter bytes
+    assert rt.stats.live_scaled_prefill >= 1  # replacement prefill provisioned
+    assert saw_loading  # and it actually went through the loading ramp
+    _, gapped = rt.router.handoff_report()
+    assert gapped == 0
+
+
+def test_mutated_engine_keeps_decoding_correctly():
+    """Requests admitted to a mutated (ex-prefill) engine still match the
+    colocated reference — the mutation reuses the resident parameters."""
+    rt = _runtime(n_slots=2)
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, CFG.vocab_size, size=16).astype(np.int32) for _ in range(8)]
+    t = 0.0
+    rids = [rt.submit(p, 6, t) for p in prompts]
+    for _ in range(800):
+        if rt.n_outstanding == 0:
+            break
+        t += 0.01
+        rt.tick(t)
+    assert rt.n_outstanding == 0 and rt.stats.mutations >= 1
+    ref_eng = _engine(n_slots=1, max_seq=48)
+    for rid, prompt in zip(rids[:3], prompts[:3]):
+        ref_eng.submit(ServeRequest(100 + rid, prompt, 6))
+        (ref,) = ref_eng.run_until_done()
+        assert rt.completed[rid].out_tokens == ref.out_tokens
+
+
+def test_scale_down_drains_and_frees_devices():
+    rt = _runtime()
+    rng = np.random.default_rng(4)
+    t = 0.0
+    for _ in range(8):
+        rt.submit(rng.integers(0, CFG.vocab_size, size=16).astype(np.int32), 4, t)
+    for _ in range(800):
+        if rt.n_outstanding == 0:
+            break
+        t += 0.01
+        rt.tick(t)
+    assert rt.n_outstanding == 0
+    n_before = len(rt.pool.all())
+    free_before = sum(
+        1 for d in rt.topo.devices if d.role is tp.Role.FREE and not d.is_host
+    )
+    for _ in range(200):  # idle ticks past the scale-down timeout
+        t += 0.05
+        rt.tick(t)
+    assert rt.stats.scale_downs >= 1
+    assert rt.stats.retired >= 1
+    assert len(rt.pool.all()) < n_before
+    free_after = sum(
+        1 for d in rt.topo.devices if d.role is tp.Role.FREE and not d.is_host
+    )
+    assert free_after > free_before  # retirement actually freed devices

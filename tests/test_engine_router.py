@@ -18,6 +18,7 @@ def _engine(n_slots=3, max_seq=64):
     return InstanceEngine(CFG, params, n_slots=n_slots, max_seq=max_seq)
 
 
+@pytest.mark.slow
 def test_continuous_batching_completes_all_requests():
     eng = _engine(n_slots=3)
     rng = np.random.default_rng(0)
@@ -35,6 +36,7 @@ def test_continuous_batching_completes_all_requests():
         assert all(0 <= t < CFG.vocab_size for t in r.out_tokens)
 
 
+@pytest.mark.slow
 def test_engine_batched_equals_sequential():
     """Slot interleaving must not change any request's tokens."""
     prompts = [np.arange(5, dtype=np.int32) + i for i in range(3)]
@@ -84,6 +86,64 @@ def test_router_skips_partially_loaded_engines():
     assert router.dispatch([loading]) == []  # work arrives cooperatively
     ready = _engine()
     assert len(router.dispatch([loading, ready])) == 1
+
+
+def test_slo_five_x_average_ttft_rule():
+    """§6.2: a request violates when its TTFT exceeds 5x the workload mean."""
+    router = Router()
+    rids = [router.submit(10, 5, now=0.0) for _ in range(10)]
+    for rid in rids[:9]:
+        router.note_first_token(rid, 0.1)
+    router.note_first_token(rids[9], 10.0)
+    rep = router.slo_report()
+    # mean TTFT = (9*0.1 + 10)/10 = 1.09s; 5x = 5.45s -> only the straggler fails
+    assert rep.mean_ttft == pytest.approx(1.09)
+    assert rep.attainment == pytest.approx(0.9)
+
+
+def test_slo_five_x_average_tbt_rule():
+    """A single decode stall beyond 5x the mean TBT fails that request."""
+    router = Router()
+    a = router.submit(10, 5, now=0.0)
+    b = router.submit(10, 5, now=0.0)
+    router.note_first_token(a, 0.1)
+    for i in range(1, 20):  # steady 0.1s TBTs
+        router.note_token(a, 0.1 + 0.1 * i)
+    router.note_first_token(b, 0.1)
+    router.note_token(b, 0.2)
+    router.note_token(b, 10.2)  # 10s stall >> 5x mean
+    rep = router.slo_report()
+    assert rep.attainment == pytest.approx(0.5)
+
+
+def test_handoff_three_steps_and_gap_detection():
+    router = Router()
+    rid = router.submit(16, 4, now=0.0)
+    router.note_first_token(rid, 0.1)
+    router.begin_handoff(rid, src=0, dst=1, tokens_frozen=1, now=0.1)
+    assert router.pinned(rid) and not router.in_transit(rid)  # step 1: frozen
+    router.mark_migrating(rid)
+    assert router.in_transit(rid)  # step 2: pages on the wire
+    assert router.complete_handoff(rid, tokens_resumed=1, now=0.2)
+    assert not router.in_transit(rid) and not router.pinned(rid)  # step 3
+    assert router.handoff_report() == (1, 0)
+    # a mismatched resume position is a dropped/replayed token
+    rid2 = router.submit(16, 4, now=0.3)
+    router.begin_handoff(rid2, src=0, dst=1, tokens_frozen=1, now=0.4)
+    router.mark_migrating(rid2)
+    assert not router.complete_handoff(rid2, tokens_resumed=0, now=0.5)
+    assert router.handoff_report() == (2, 1)
+
+
+def test_dispatch_never_hands_out_pinned_requests():
+    router = Router()
+    pinned = router.submit(16, 4, now=0.0)
+    free = router.submit(16, 4, now=0.1)
+    router.begin_handoff(pinned, src=0, dst=1, tokens_frozen=1, now=0.2)
+    eng = _engine()
+    dispatched = router.dispatch([eng])
+    assert [rec.rid for rec, _ in dispatched] == [free]
+    assert [r.rid for r in router.queue] == [pinned]  # still queued, untouched
 
 
 def test_paged_cache_matches_contiguous():

@@ -21,7 +21,11 @@ def test_scan_trip_count_exact():
     rep = analyze(c.as_text())
     assert rep.dot_flops == pytest.approx(2 * 128**3 * 10)
     # XLA's own cost_analysis counts the body once — our whole reason to exist
-    assert c.cost_analysis()["flops"] < rep.dot_flops / 5
+    # (older jax returns a one-element list of dicts)
+    ca = c.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    assert ca["flops"] < rep.dot_flops / 5
 
 
 def test_nested_scan_multiplies():
@@ -67,8 +71,8 @@ def test_collectives_counted_with_trip_multiplier():
         import jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P, NamedSharding
         from repro.launch.hlo_analysis import analyze
-        mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((2, 4), ('data', 'model'))
 
         def f(x, ws):
             def body(x, w):

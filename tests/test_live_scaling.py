@@ -14,6 +14,7 @@ from repro.models import transformer as TF
 KEY = jax.random.PRNGKey(0)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["granite-8b", "olmoe-1b-7b", "mamba2-370m"])
 def test_cooperative_forward_equals_monolithic(arch):
     """The correctness contract of live scaling (§5.2): target [0,k) +

@@ -20,6 +20,7 @@ def _frames_for(cfg, b):
     return None
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS + PAPER_IDS)
 def test_arch_smoke_forward_prefill_decode(arch):
     """One forward + train loss + prefill + decode step per architecture:
@@ -132,6 +133,7 @@ def test_vocab_padding_masked():
         assert int(nxt.max()) < 250
 
 
+@pytest.mark.slow
 def test_forward_layers_range_composes():
     """forward_layers_range(0,k) ∘ forward_layers_range(k,L) == full stack —
     the layer-level serving abstraction is exact (paper §4)."""

@@ -57,6 +57,7 @@ def _moe_reference(params, x, cfg, group_size):
     return out.reshape(b, s, d)
 
 
+@pytest.mark.slow
 def test_einsum_dispatch_matches_per_token_reference():
     cfg = get_config("olmoe-1b-7b", reduced=True).replace(capacity_factor=8.0)
     # high capacity factor -> no drops -> exact comparison
@@ -90,6 +91,7 @@ def test_moe_group_size_config_used():
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 def test_int8_kv_cache_matches_bf16_predictions():
     cfg = get_config("granite-8b", reduced=True)
     cfgq = cfg.replace(kv_quant=True)

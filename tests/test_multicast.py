@@ -1,7 +1,9 @@
 """Hypothesis property tests for the Algorithm-11 multicast planner."""
 
-import hypothesis.strategies as st
 import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core import multicast as mc

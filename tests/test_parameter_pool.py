@@ -1,5 +1,8 @@
 """Global parameter pool: the O(1) host-cache invariant + fault tolerance."""
 
+import pytest
+
+pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 from hypothesis import given, settings
 

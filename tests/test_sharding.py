@@ -1,8 +1,10 @@
 """Logical-axis sharding substrate: shape-aware resolution properties."""
 
+import pytest
+
+pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 import jax
-import pytest
 from hypothesis import given, settings
 from jax.sharding import PartitionSpec as P
 

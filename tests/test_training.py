@@ -24,6 +24,7 @@ def _batch(step, b=8, s=64):
     return {k: jnp.asarray(v) for k, v in make_batch(CFG, b, s, step=step).items()}
 
 
+@pytest.mark.slow
 def test_loss_decreases_over_training():
     params = TF.init_params(jax.random.PRNGKey(0), CFG)
     opt = adamw_init(params, OPT)
@@ -36,6 +37,7 @@ def test_loss_decreases_over_training():
     assert all(np.isfinite(losses))
 
 
+@pytest.mark.slow
 def test_microbatched_grads_match_full_batch():
     """Gradient accumulation over n microbatches == one full-batch step."""
     params = TF.init_params(jax.random.PRNGKey(1), CFG)
@@ -92,6 +94,7 @@ def test_lr_schedule_shape():
     assert 0.1 < mid < 1.0
 
 
+@pytest.mark.slow
 def test_checkpoint_restart_reproduces_trajectory():
     """Fault tolerance: train 10 steps with a checkpoint at 5, kill, restore,
     re-run 5..10 — final params must be IDENTICAL (deterministic pipeline +

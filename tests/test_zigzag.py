@@ -1,7 +1,9 @@
 """ZigZag scheduling: exact ILP solver properties + ILP-free rule quality."""
 
-import hypothesis.strategies as st
 import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core import zigzag as zz
