@@ -98,6 +98,29 @@ class Autoscaler:
         self._below_since: dict[str, float | None] = {"prefill": None, "decode": None}
 
     # ------------------------------------------------------------------
+    def phase_pressures(self, n_prefill: int, n_decode: int) -> tuple[float, float]:
+        """Per-phase SLO pressure given the current instance counts.
+
+        Dimensionless: 1.0 means the phase's monitored load (tokens/s, or KV
+        occupancy for decode) sits exactly at its scale-up bound; >1 means
+        under-provisioned *right now*; inf means offered load with zero
+        capacity (the fleet treats that as a cold-start request)."""
+        p = self.policy
+        pre_cap = n_prefill * self.pre_cap * p.upper_util
+        dec_cap = n_decode * self.dec_cap * p.upper_util
+        pre_load = self.prefill_mon.avg_tokens_per_s()
+        dec_load = self.decode_mon.avg_tokens_per_s()
+        pre = pre_load / pre_cap if pre_cap > 0 else (float("inf") if pre_load > 0 else 0.0)
+        dec = dec_load / dec_cap if dec_cap > 0 else (float("inf") if dec_load > 0 else 0.0)
+        kv = self.decode_mon.avg_kv_frac() / p.kv_upper
+        return pre, max(dec, kv)
+
+    def slo_pressure(self, n_prefill: int, n_decode: int) -> float:
+        """How close this model is to violating its SLO — the fleet
+        arbitration signal (MaaS control plane): max over phase pressures."""
+        return max(self.phase_pressures(n_prefill, n_decode))
+
+    # ------------------------------------------------------------------
     def decide(
         self, now: float, n_prefill: int, n_decode: int
     ) -> ScaleDecision:
@@ -120,11 +143,22 @@ class Autoscaler:
                     d.decode_delta = min(dec_need - n_decode, p.max_instances - n_decode)
                     d.prescaled = True
 
-        # ---- decode scale-up: KV-pressure based
+        # ---- decode scale-up: load- or KV-pressure based
         kv = self.decode_mon.avg_kv_frac()
-        if d.decode_delta == 0 and kv > p.kv_upper and n_decode < p.max_instances:
-            d.decode_delta = 1
-            d.reason = d.reason or f"decode KV {kv:.0%} > {p.kv_upper:.0%}"
+        dec_load = self.decode_mon.avg_tokens_per_s()
+        dec_cap = max(n_decode, 1) * self.dec_cap
+        if d.decode_delta == 0 and n_decode < p.max_instances:
+            if dec_load > p.upper_util * dec_cap:
+                dec_need = int(-(-dec_load // (p.upper_util * self.dec_cap)))  # ceil
+                d.decode_delta = min(
+                    max(dec_need - n_decode, 1), p.max_instances - n_decode
+                )
+                d.reason = d.reason or (
+                    f"decode load {dec_load:.0f} > {p.upper_util:.0%} of {dec_cap:.0f}"
+                )
+            elif kv > p.kv_upper:
+                d.decode_delta = 1
+                d.reason = d.reason or f"decode KV {kv:.0%} > {p.kv_upper:.0%}"
 
         # ---- scale-down: timeout below lower bound
         for phase, mon, n_cur, cap_one in (

@@ -24,6 +24,13 @@ from typing import Iterable
 from repro.core.topology import Device, Role, Topology
 
 
+class NoAliveHostError(RuntimeError):
+    """Raised when a registration needs a host-cache slot but every host in
+    the cluster is marked failed — the model cannot satisfy the >=1-copy
+    invariant until a host recovers (or the model is re-uploaded from blob
+    storage onto a repaired host)."""
+
+
 @dataclasses.dataclass
 class ModelRecord:
     name: str
@@ -48,6 +55,11 @@ class ParameterPool:
         if name in self.models:
             return
         alive = [h for h in self._hosts if h not in self._failed_hosts]
+        if not alive:
+            raise NoAliveHostError(
+                f"cannot register {name!r}: every host is failed — recover a "
+                "host (recover_host) before registering new models"
+            )
         host = alive[next(self._rr) % len(alive)]
         self.models[name] = ModelRecord(name, size_bytes, host_copy=host)
 
@@ -62,6 +74,28 @@ class ParameterPool:
         rec = self.models[name]
         for i in device_ids:
             rec.gpu_devices.discard(i)
+            d = self.topo.device(i)
+            if d.model == name:
+                d.model = None
+                d.role = Role.FREE
+
+    # -- scale-to-zero / teardown (MaaS control plane) -----------------------
+    def deactivate(self, name: str) -> list[int]:
+        """Scale-to-zero: drop every GPU copy, keeping ONLY the single host
+        copy (the O(1) floor a parked model occupies).  Returns the freed
+        device ids."""
+        devs = sorted(self.models[name].gpu_devices)
+        self.reclaim(name, devs)
+        return devs
+
+    def evict(self, name: str) -> None:
+        """Remove the model from the MAAS entirely — GPU copies reclaimed and
+        the host-cache slot released (next use needs a blob-storage re-upload
+        + fresh ``register``)."""
+        rec = self.models.pop(name, None)
+        if rec is None:
+            return
+        for i in sorted(rec.gpu_devices):
             d = self.topo.device(i)
             if d.model == name:
                 d.model = None

@@ -16,6 +16,15 @@ instance mutation per the paper's §5.4 policy:
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --disagg --requests 24
 
+With ``--maas`` the fleet serves SEVERAL models on one shared topology: the
+MaaS control plane (repro.serving.maas) arbitrates free devices between
+per-model runtimes by SLO pressure x queue depth, parks idle models at zero
+accelerators (only the O(1) host copy survives) and cold-starts them back
+via multicast when requests arrive:
+
+  PYTHONPATH=src python -m repro.launch.serve --maas \
+      --models granite-8b,qwen1.5-4b,minicpm3-4b --requests 24
+
 This is the runnable counterpart of the cluster-scale *simulator*
 (repro.core.simulator), which reproduces the paper's figures; here every
 forward pass is a real jitted model execution.
@@ -105,6 +114,92 @@ def run_disagg(args) -> None:
         raise SystemExit(f"FAIL: {dropped} request(s) dropped or token-gapped")
 
 
+def run_maas(args) -> None:
+    """Serverless multi-model MaaS: N models on one shared topology, devices
+    arbitrated by the fleet scheduler, idle models scaled to zero and
+    cold-started back via multicast from the O(1) host copy."""
+    from repro.core.autoscaler import PolicyConfig
+    from repro.serving import traces
+    from repro.serving.maas import FleetPolicy, FleetScheduler, ZERO
+
+    archs = [m.strip() for m in args.models.split(",") if m.strip()]
+    if len(archs) < 2:
+        raise SystemExit("--maas needs at least two models (--models a,b,...)")
+    max_seq = args.prompt_len + args.gen_len + 8
+
+    topo = topo_mod.add_host_sources(topo_mod.make_cluster(2, 4, bw_gbps=100.0))
+    fleet = FleetScheduler(
+        topo, policy=FleetPolicy(idle_to_zero_s=1.5), verbose=True
+    )
+    cfgs = {}
+    for i, arch in enumerate(archs):
+        cfg = get_config(arch, reduced=True)
+        params = TF.init_params(jax.random.PRNGKey(args.seed + i), cfg)
+        cfgs[cfg.name] = cfg
+        fleet.add_model(
+            cfg,
+            params,
+            n_prefill=1,
+            n_decode=1,
+            n_slots=args.n_slots,
+            max_seq=max_seq,
+            model_bytes=get_config(arch).approx_params() * 2,
+            prefill_capacity_tps=2000.0,
+            decode_capacity_tps=200.0,
+            policy=PolicyConfig(max_instances=3, kv_upper=0.5, scale_down_timeout_s=0.5),
+        )
+
+    # Zipf-skewed, burst-staggered arrivals compressed to a few wall seconds;
+    # the cold tail should spend part of the run parked at zero devices
+    mix = traces.multi_model_mix(
+        list(cfgs), duration=60.0, total_rate=1.0, seed=args.seed
+    )
+    # subsample evenly across the horizon (keeping late arrivals preserves
+    # the scale-to-zero -> cold-start cycle) and compress to ~10 wall seconds
+    step = max(1, len(mix) // args.requests)
+    scale = 10.0 / 60.0
+    arrivals = [(t * scale, m) for t, m, _, _ in mix[::step][: args.requests]]
+
+    rng = np.random.default_rng(args.seed)
+    t0 = time.perf_counter()
+    clock = lambda: time.perf_counter() - t0
+    pending = sorted(arrivals)
+    for _ in range(200_000):
+        if not pending and fleet.n_outstanding == 0:
+            break
+        now = clock()
+        while pending and pending[0][0] <= now:
+            _, model = pending.pop(0)
+            prompt = rng.integers(0, cfgs[model].vocab_size, size=args.prompt_len)
+            fleet.submit(model, prompt.astype(np.int32), args.gen_len, now)
+        fleet.tick(now)
+        assert fleet.param_pool.invariant_ok()
+    else:
+        raise SystemExit(f"FAIL: tick budget exhausted, {fleet.n_outstanding} outstanding")
+
+    dropped = 0
+    print()
+    for name, t in fleet.tenants.items():
+        rep = t.runtime.router.slo_report()
+        _, gapped = t.runtime.router.handoff_report()
+        dropped += t.runtime.n_outstanding + gapped
+        print(
+            f"[maas] {name}: {rep.n} served  mean_ttft {rep.mean_ttft*1e3:.0f}ms "
+            f"attainment {rep.attainment:.0%}  cold_starts {t.runtime.stats.cold_starts} "
+            f"scaled_to_zero {t.stats.scaled_to_zero} "
+            f"gpu_seconds {t.stats.gpu_seconds:.2f} "
+            f"{'(at zero now)' if t.state == ZERO else ''}"
+        )
+    s = fleet.stats
+    print(
+        f"[maas] fleet: {s.grants} grants, {s.cold_starts} cold starts, "
+        f"{s.scale_to_zero_events} scale-to-zero, {s.preemptions} preemptions, "
+        f"{s.gpu_seconds:.2f} GPU-seconds occupied"
+    )
+    if dropped:
+        raise SystemExit(f"FAIL: {dropped} request(s) dropped or token-gapped")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-8b")
@@ -117,8 +212,15 @@ def main() -> None:
                     help="run the PD-disaggregated runtime (prefill/decode pools)")
     ap.add_argument("--n-prefill", type=int, default=2)
     ap.add_argument("--n-decode", type=int, default=1)
+    ap.add_argument("--maas", action="store_true",
+                    help="serve several models on one fleet (MaaS control plane)")
+    ap.add_argument("--models", default="granite-8b,qwen1.5-4b,minicpm3-4b",
+                    help="comma-separated arch ids for --maas")
     args = ap.parse_args()
 
+    if args.maas:
+        run_maas(args)
+        return
     if args.disagg:
         run_disagg(args)
         return

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
+from typing import Iterable
 
 import numpy as np
 
@@ -52,6 +53,9 @@ class RuntimeStats:
     prescaled_decodes: int = 0
     scale_downs: int = 0
     retired: int = 0
+    cold_starts: int = 0
+    cold_starts_from_host: int = 0  # re-multicast seeded by the O(1) host copy
+    preemptions: int = 0  # engines drained by fleet arbitration, not own policy
 
 
 class ClusterRuntime:
@@ -71,6 +75,8 @@ class ClusterRuntime:
         model_bytes: int | None = None,
         page_tokens: int = 16,
         prefills_per_engine_per_tick: int = 1,
+        param_pool: ParameterPool | None = None,
+        allowed_devices: Iterable[int] | None = None,
         verbose: bool = False,
     ):
         self.cfg = cfg
@@ -88,7 +94,13 @@ class ClusterRuntime:
         # sizing); callers may pass the full-architecture footprint while
         # computing on a reduced config.
         self.model_bytes = model_bytes or cfg.approx_params() * 2
-        self.param_pool = ParameterPool(topo)
+        # a shared pool + an allowed-device set are how the MaaS fleet
+        # scheduler multi-tenants several runtimes onto one topology; a
+        # standalone runtime owns the whole cluster (allowed_devices=None)
+        self.param_pool = param_pool if param_pool is not None else ParameterPool(topo)
+        self.allowed_devices = (
+            set(allowed_devices) if allowed_devices is not None else None
+        )
         self.param_pool.register(cfg.name, self.model_bytes)
 
         self.pool = P.EnginePool(topo)
@@ -100,17 +112,23 @@ class ClusterRuntime:
             decode_capacity_tps=decode_capacity_tps,
         )
         self.stats = RuntimeStats()
+        # frozen: policy-driven scaling suspended.  Set while the fleet
+        # drains this runtime to zero (a parked model must not re-grow from
+        # decaying monitor samples) and by the static-allocation baseline;
+        # cold_start() unfreezes.  Monitors keep recording so slo_pressure()
+        # stays live for fleet arbitration.
+        self.frozen = False
         self._sreqs: dict[int, ServeRequest] = {}
         self.completed: dict[int, ServeRequest] = {}
         self._arrived_tokens = 0  # offered prefill load since last monitor tick
         self._decoded_tokens = 0
         self._last_mon: float | None = None
 
-        spare_ids = [d.id for d in topo.spares()]
+        spare_ids = self._spare_ids()
         if n_prefill + n_decode > len(spare_ids):
             raise ValueError(
                 f"requested {n_prefill} prefill + {n_decode} decode instances "
-                f"but the topology has only {len(spare_ids)} spare devices"
+                f"but only {len(spare_ids)} spare devices are available"
             )
         spares = iter(spare_ids)
         for phase, n in ((P.PREFILL, n_prefill), (P.DECODE, n_decode)):
@@ -128,6 +146,98 @@ class ClusterRuntime:
         if self.verbose:
             print(msg)
 
+    # -- multi-tenancy hooks (MaaS fleet arbitration) ------------------------
+    def _spare_ids(self) -> list[int]:
+        """Free accelerators this runtime may provision — the whole cluster's
+        spares for a standalone runtime, only the fleet scheduler's grants
+        when multi-tenanted."""
+        ids = [d.id for d in self.topo.spares()]
+        if self.allowed_devices is not None:
+            ids = [i for i in ids if i in self.allowed_devices]
+        return ids
+
+    @property
+    def n_engines(self) -> int:
+        return len(self.pool.all())
+
+    @property
+    def n_serving(self) -> int:
+        return len(self.pool.serving(P.PREFILL)) + len(self.pool.serving(P.DECODE))
+
+    def slo_pressure(self) -> float:
+        """The fleet-arbitration signal: >1 means under-provisioned now."""
+        return self.autoscaler.slo_pressure(
+            self.pool.n_provisioned(P.PREFILL), self.pool.n_provisioned(P.DECODE)
+        )
+
+    def acquire_devices(self, ids: Iterable[int]) -> None:
+        """Fleet grant: these devices may be provisioned by this runtime."""
+        if self.allowed_devices is None:
+            self.allowed_devices = set()
+        self.allowed_devices.update(ids)
+
+    def release_devices(self) -> list[int]:
+        """Return granted-but-unoccupied devices to the fleet (called every
+        scheduler tick — grants not consumed by a scale-up flow back)."""
+        if self.allowed_devices is None:
+            return []
+        freed = [
+            i
+            for i in sorted(self.allowed_devices)
+            if self.topo.device(i).role is topo_mod.Role.FREE
+        ]
+        self.allowed_devices.difference_update(freed)
+        return freed
+
+    def drain_all(self) -> int:
+        """Scale-to-zero entry: every engine finishes its in-flight work,
+        takes nothing new, and frees its device on retirement.  The shared
+        ParameterPool keeps only the single O(1) host copy once the last
+        GPU copy is reclaimed."""
+        self.frozen = True
+        n = 0
+        for pe in self.pool.all():
+            if pe.state != P.DRAINING:
+                self.pool.drain(pe)
+                n += 1
+        return n
+
+    def cold_start(self, now: float) -> int:
+        """Re-provision from zero capacity: live-scale a prefill and a decode
+        engine, re-multicasting parameters from a surviving GPU copy if one
+        exists, else from the O(1) host-cached copy.  Returns the number of
+        engines started."""
+        self.frozen = False
+        gpu_srcs, _ = self.param_pool.sources(self.cfg.name)
+        from_host = not gpu_srcs
+        n = 0
+        for phase in (P.PREFILL, P.DECODE):
+            if self._live_scale(phase, now) is not None:
+                n += 1
+        if n:
+            self.stats.cold_starts += 1
+            if from_host:
+                self.stats.cold_starts_from_host += 1
+        return n
+
+    def preempt_one(self, now: float) -> int | None:
+        """Fleet-driven preemption: drain the least-loaded engine of the
+        better-provisioned phase so a starved co-tenant can take the device
+        once it retires.  Returns the device id, or None if nothing can be
+        spared without killing a lone phase."""
+        cands = {
+            ph: [pe for pe in self.pool.phase(ph) if pe.state == P.ACTIVE]
+            for ph in (P.PREFILL, P.DECODE)
+        }
+        phase = max(cands, key=lambda ph: len(cands[ph]))
+        if len(cands[phase]) <= 1:
+            return None
+        victim = min(cands[phase], key=P.PooledEngine.load)
+        self.pool.drain(victim)
+        self.stats.preemptions += 1
+        self._log(f"[fleet] preempted {phase} dev {victim.device_id}")
+        return victim.device_id
+
     # -- request intake -----------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int, now: float) -> int:
         rid = self.router.submit(len(prompt), max_new_tokens, now)
@@ -144,7 +254,7 @@ class ClusterRuntime:
         """Provision a spare device with a live-scaling engine: parameters
         stream in at the multicast plan's modelled bandwidth while the engine
         ramps ``loaded_layers`` from 0."""
-        spares = [d.id for d in self.topo.spares()]
+        spares = self._spare_ids()
         if not spares:
             return None
         target = spares[0]
@@ -190,7 +300,7 @@ class ClusterRuntime:
         spared.  Returns False when neither path had resources."""
         prefills = self.pool.serving(P.PREFILL)
         can_mutate = prefills and (
-            self.pool.n_provisioned(P.PREFILL) >= 2 or self.topo.spares()
+            self.pool.n_provisioned(P.PREFILL) >= 2 or self._spare_ids()
         )
         if can_mutate:
             victim = min(prefills, key=P.PooledEngine.load)
@@ -216,6 +326,10 @@ class ClusterRuntime:
         # 0. retire drained instances; free their devices (idle() holds
         #    retirement while KV migrations are still in flight toward one)
         for pe in self.pool.retire_idle():
+            if pe.session is not None:
+                # drained mid-live-scale: the parameter stream never finished,
+                # so its incast registration must be torn down here
+                self.channel.unregister_param_stream(pe.device_id)
             self.param_pool.reclaim(self.cfg.name, [pe.device_id])
             self.stats.retired += 1
             self._log(f"[scale] retired {pe.phase} dev {pe.device_id}")
@@ -303,7 +417,17 @@ class ClusterRuntime:
                 self.completed[r.rid] = r
                 finished_rids.append(r.rid)
 
-        # 5. feed the load monitors + run the scaling policy
+        # 5. liveness guard: queued work must never sit against an empty
+        #    phase pool — mutation can flip the last prefill instance to
+        #    decode after the load monitors already decayed, and decide()
+        #    treats zero instances as capacity one, so nothing would ever
+        #    re-provision the phase
+        if not self.frozen and self.router.queue:
+            for phase in (P.PREFILL, P.DECODE):
+                if self.pool.n_provisioned(phase) == 0:
+                    self._live_scale(phase, now)
+
+        # 6. feed the load monitors + run the scaling policy
         if self._last_mon is None:
             self._last_mon = now
         dt = now - self._last_mon
@@ -321,6 +445,8 @@ class ClusterRuntime:
             self._arrived_tokens = 0
             self._decoded_tokens = 0
             self._last_mon = now
+            if self.frozen:
+                return finished_rids
             decision = self.autoscaler.decide(
                 now,
                 self.pool.n_provisioned(P.PREFILL),

@@ -1,0 +1,317 @@
+"""Fleet-wide GPU arbitration for serverless multi-model MaaS (paper §1, §5.3).
+
+The paper's premise is that many models share one GPU fleet: each scales up
+in seconds via GPU-to-GPU multicast, and *down to zero accelerators* — only
+the single O(1) host-DRAM copy in the shared :class:`ParameterPool` remains
+— so the fleet's free devices are a common pool every model draws from.
+This module is the control plane that makes those decisions:
+
+  * **arbitration** — each tick, free devices are granted to per-model
+    runtimes in priority order (priority = SLO pressure × queue depth);
+    grants a runtime does not consume flow back the next tick, so devices
+    move between models at tick granularity;
+  * **scale-to-zero** — a model idle past a timeout drains all engines and
+    releases every device; the ParameterPool keeps exactly one host copy;
+  * **cold start** — a request for a parked model triggers a re-multicast
+    live-scale from a surviving GPU copy (possibly a draining co-instance)
+    or, when none exists, the O(1) host copy;
+  * **preemption** — when a hot model is starved (pressure above bound, no
+    free device), the lowest-priority idle model is drained to give up
+    devices.
+
+The per-model scaling *mechanism* stays inside each
+:class:`~repro.serving.disagg.runtime.ClusterRuntime` (live-scaling,
+mutation, decode pre-scaling, §5.4); the fleet only decides who may hold
+which accelerator.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import deque
+
+from repro.core import topology as topo_mod
+from repro.core.parameter_pool import ParameterPool
+from repro.serving.disagg import pools as P
+from repro.serving.disagg.runtime import ClusterRuntime
+from repro.serving.maas import tenant as T
+from repro.serving.maas.tenant import Tenant
+
+
+@dataclasses.dataclass
+class FleetPolicy:
+    idle_to_zero_s: float = 3.0  # drain a model idle this long (scale-to-zero)
+    grow_pressure: float = 1.0  # grant devices above this SLO pressure
+    starve_pressure: float = 1.0  # an unserved demander above this may preempt
+    preempt_pressure: float = 0.5  # victims must be *below* this priority
+    max_grant_per_tick: int = 2  # per-tenant grant rate limit
+    arbitration: bool = True  # False = static allocation (benchmark baseline)
+    scale_to_zero: bool = True
+
+
+@dataclasses.dataclass
+class FleetStats:
+    cold_starts: int = 0
+    scale_to_zero_events: int = 0
+    preemptions: int = 0
+    grants: int = 0  # devices handed out by arbitration
+    gpu_seconds: float = 0.0  # fleet-wide device-seconds occupied by engines
+
+
+class FleetScheduler:
+    """N models on one shared topology + one shared O(1) parameter pool."""
+
+    def __init__(
+        self,
+        topo: topo_mod.Topology,
+        *,
+        policy: FleetPolicy | None = None,
+        verbose: bool = False,
+    ):
+        self.topo = topo
+        self.policy = policy or FleetPolicy()
+        self.param_pool = ParameterPool(topo)
+        self.tenants: dict[str, Tenant] = {}
+        self.stats = FleetStats()
+        self.verbose = verbose
+        self._last_tick: float | None = None
+
+    def _log(self, msg: str) -> None:
+        if self.verbose:
+            print(msg)
+
+    # -- fleet membership ----------------------------------------------------
+    def free_devices(self) -> list[int]:
+        """Spare accelerators owned by no tenant — the arbitration pool."""
+        owned: set[int] = set()
+        for t in self.tenants.values():
+            if t.runtime.allowed_devices:
+                owned |= t.runtime.allowed_devices
+        return [d.id for d in self.topo.spares() if d.id not in owned]
+
+    def add_model(
+        self, cfg, params, *, n_prefill: int = 1, n_decode: int = 1, **runtime_kw
+    ) -> Tenant:
+        """Register a model with the fleet and seat it on free devices.
+
+        The runtime shares the fleet's topology and ParameterPool; its
+        allowed-device set starts as exactly the initial grant, so it can
+        never provision outside what arbitration hands it."""
+        if cfg.name in self.tenants:
+            raise ValueError(f"model {cfg.name!r} already registered")
+        free = self.free_devices()
+        need = n_prefill + n_decode
+        if need > len(free):
+            raise ValueError(
+                f"model {cfg.name!r} needs {need} devices but the fleet has "
+                f"only {len(free)} free"
+            )
+        rt = ClusterRuntime(
+            cfg,
+            params,
+            topo=self.topo,
+            param_pool=self.param_pool,
+            allowed_devices=free[:need],
+            n_prefill=n_prefill,
+            n_decode=n_decode,
+            **runtime_kw,
+        )
+        t = Tenant(cfg.name, rt)
+        self.tenants[cfg.name] = t
+        return t
+
+    # -- request intake ------------------------------------------------------
+    def submit(self, model: str, prompt, max_new_tokens: int, now: float) -> int:
+        t = self.tenants[model]
+        t.note_arrival()
+        return t.runtime.submit(prompt, max_new_tokens, now)
+
+    @property
+    def n_outstanding(self) -> int:
+        return sum(t.runtime.n_outstanding for t in self.tenants.values())
+
+    # -- the control loop ----------------------------------------------------
+    def tick(self, now: float) -> dict[str, list[int]]:
+        """One fleet iteration; returns rids completed this tick per model."""
+        p = self.policy
+        dt = 0.0 if self._last_tick is None else max(0.0, now - self._last_tick)
+        self._last_tick = now
+
+        # 0. GPU-time accounting: device-seconds occupied by engines
+        #    (loading and draining engines hold their device too)
+        for t in self.tenants.values():
+            held = t.runtime.n_engines * dt
+            t.stats.gpu_seconds += held
+            self.stats.gpu_seconds += held
+
+        if p.arbitration:
+            # 1. grants not consumed by a scale-up flow back to the fleet
+            for t in self.tenants.values():
+                t.runtime.release_devices()
+
+        # 2. scale-to-zero: drain models idle past the timeout
+        if p.scale_to_zero:
+            for t in self.tenants.values():
+                if t.busy:
+                    t.idle_since = None
+                elif t.state == T.ACTIVE and t.runtime.n_engines > 0:
+                    if t.idle_since is None:
+                        t.idle_since = now
+                    elif now - t.idle_since >= p.idle_to_zero_s:
+                        t.runtime.drain_all()
+                        t.state = T.DRAINING
+                        self._log(f"[fleet] {t.name}: idle -> draining to zero")
+
+        # 3. arbitration: free devices go to demanders, hottest first;
+        #    tenants at zero capacity with waiting work cold-start
+        starved: list[tuple[Tenant, int]] = []
+        if p.arbitration:
+            ranked = sorted(
+                self.tenants.values(), key=Tenant.priority, reverse=True
+            )
+            free = deque(self.free_devices())
+            for t in ranked:
+                want = self._demand(t)
+                granted: list[int] = []
+                while want > 0 and free:
+                    granted.append(free.popleft())
+                    want -= 1
+                if granted:
+                    t.runtime.acquire_devices(granted)
+                    self.stats.grants += len(granted)
+                    self._log(f"[fleet] {t.name}: granted devices {granted}")
+                    if self._needs_cold_start(t):
+                        host_starts_before = t.runtime.stats.cold_starts_from_host
+                        started = t.runtime.cold_start(now)
+                        if started:
+                            from_host = (
+                                t.runtime.stats.cold_starts_from_host > host_starts_before
+                            )
+                            t.state = T.ACTIVE
+                            self.stats.cold_starts += 1
+                            self._log(
+                                f"[fleet] {t.name}: cold start ({started} "
+                                f"engine(s), source="
+                                f"{'host O(1) copy' if from_host else 'GPU copy'})"
+                            )
+                if want > 0 and (
+                    self._needs_cold_start(t)
+                    or t.runtime.slo_pressure() >= p.starve_pressure
+                ):
+                    starved.append((t, want))
+
+            # 4. preemption: starved hot models reclaim devices from idle ones
+            for t, want in starved:
+                self._preempt_for(t, want, now)
+
+        # 5. advance every runtime; finalize drain-to-zero transitions
+        finished: dict[str, list[int]] = {}
+        for name, t in self.tenants.items():
+            finished[name] = t.runtime.tick(now)
+            if t.fully_drained():
+                t.state = T.ZERO
+                t.idle_since = None
+                # defensive: every GPU copy must be reclaimed by now — the
+                # pool keeps exactly the single O(1) host copy
+                self.param_pool.deactivate(t.name)
+                t.runtime.release_devices()
+                t.stats.scaled_to_zero += 1
+                self.stats.scale_to_zero_events += 1
+                self._log(f"[fleet] {t.name}: at zero (host copy only)")
+        return finished
+
+    # -- internals -----------------------------------------------------------
+    def _needs_cold_start(self, t: Tenant) -> bool:
+        rt = t.runtime
+        n_prov = rt.pool.n_provisioned(P.PREFILL) + rt.pool.n_provisioned(P.DECODE)
+        return n_prov == 0 and t.queue_depth > 0
+
+    def _demand(self, t: Tenant) -> int:
+        """Devices this tenant wants from arbitration this tick."""
+        p = self.policy
+        rt = t.runtime
+        if self._needs_cold_start(t):
+            return 2  # one prefill + one decode seat
+        n_pre = rt.pool.n_provisioned(P.PREFILL)
+        n_dec = rt.pool.n_provisioned(P.DECODE)
+        if (n_pre + n_dec == 0) or rt.frozen:
+            return 0  # parked (and nothing queued), or held static
+        # per-phase: the runtime's own policy caps instances per phase, so
+        # granting a device its binding phase can't use just ping-pongs it
+        # through release_devices() every tick
+        cap = rt.autoscaler.policy.max_instances
+        pressures = rt.autoscaler.phase_pressures(n_pre, n_dec)
+        want = 0
+        for pressure, n, head in zip(pressures, (n_pre, n_dec), (cap - n_pre, cap - n_dec)):
+            if head <= 0:
+                continue
+            if n == 0 and rt.n_outstanding > 0:
+                # a half-seated tenant (e.g. a cold start that only got one
+                # device) reads zero pressure on the empty phase — but work
+                # cannot flow without at least one instance of each
+                want += 1
+            elif pressure <= p.grow_pressure:
+                continue
+            elif not math.isfinite(pressure):
+                want += head
+            else:
+                want += min(head, math.ceil((pressure - 1.0) * max(n, 1)) or 1)
+        return min(p.max_grant_per_tick, want)
+
+    def _preempt_for(self, starving: Tenant, want: int, now: float) -> None:
+        """Idle-model preemption: drain capacity from the lowest-priority
+        tenants so ``starving`` finds free devices in a following tick."""
+        victims = sorted(self.tenants.values(), key=Tenant.priority)
+        for v in victims:
+            if want <= 0:
+                break
+            if v is starving or v.runtime.n_engines == 0:
+                continue
+            if v.priority() >= self.policy.preempt_pressure:
+                break  # sorted ascending: nobody cheaper remains
+            if not v.busy and self.policy.scale_to_zero:
+                n = v.runtime.drain_all()
+                if n:
+                    v.state = T.DRAINING
+                    v.stats.preempted += 1
+                    self.stats.preemptions += 1
+                    want -= n
+                    self._log(
+                        f"[fleet] {v.name}: preempted (drain all {n}) for {starving.name}"
+                    )
+            else:
+                dev = v.runtime.preempt_one(now)
+                if dev is not None:
+                    v.stats.preempted += 1
+                    self.stats.preemptions += 1
+                    want -= 1
+                    self._log(
+                        f"[fleet] {v.name}: preempted dev {dev} for {starving.name}"
+                    )
+
+    # -- reporting -----------------------------------------------------------
+    def slo_reports(self):
+        return {name: t.runtime.router.slo_report() for name, t in self.tenants.items()}
+
+    def attainment(self, ttft_slo: float, tbt_slo: float) -> float:
+        """Fleet-wide fraction of requests within an *absolute* SLO — the
+        cross-system comparison metric (the per-router 5x-average SLO is
+        self-referential, so it cannot compare two systems at 'equal SLO')."""
+        ok = n = 0
+        for t in self.tenants.values():
+            for r in t.runtime.router.records.values():
+                if r.ttft is None:
+                    continue
+                n += 1
+                if r.ttft <= ttft_slo and all(b <= tbt_slo for b in r.tbts()):
+                    ok += 1
+        return ok / n if n else 1.0
+
+    def run_until_done(self, clock, *, max_ticks: int = 100_000) -> bool:
+        """Drive ticks until every submitted request completed."""
+        for _ in range(max_ticks):
+            if self.n_outstanding == 0:
+                return True
+            self.tick(clock())
+        return self.n_outstanding == 0

@@ -82,6 +82,48 @@ def azure_conv(duration: float = 300.0, base_rate: float = 2.0, *,
 TRACES = {"burstgpt": burstgpt, "azure_code": azure_code, "azure_conv": azure_conv}
 
 
+# ---------------------------------------------------------------------------
+# Multi-model MaaS traces (fleet arbitration / scale-to-zero workloads)
+# ---------------------------------------------------------------------------
+
+
+def zipf_weights(n: int, alpha: float = 1.2) -> np.ndarray:
+    """Skewed model popularity: weight of the rank-k model ∝ 1/k^alpha —
+    the MaaS regime the paper targets (a few hot models, a long cold tail
+    that should spend most of its life scaled to zero)."""
+    ranks = np.arange(1, n + 1, dtype=float)
+    w = ranks**-alpha
+    return w / w.sum()
+
+
+def multi_model_mix(
+    models: list[str],
+    *,
+    duration: float = 300.0,
+    total_rate: float = 4.0,
+    alpha: float = 1.2,
+    kind: str = "burstgpt",
+    stagger: bool = True,
+    seed: int = 0,
+) -> list[tuple[float, str, int, int]]:
+    """Merged fleet trace: each model draws arrivals from ``kind``'s shape
+    at a Zipf share of ``total_rate``; returns (t, model, prompt_tokens,
+    output_tokens) sorted by time.
+
+    ``stagger`` rotates each model's arrivals by a fraction of the horizon
+    so bursts peak at *different* times — the premise of fleet sharing:
+    aggregate demand is far smoother than any one model's, so a shared pool
+    needs far fewer devices than per-model peak provisioning (Fig. 18)."""
+    ws = zipf_weights(len(models), alpha)
+    merged: list[tuple[float, str, int, int]] = []
+    for k, (m, w) in enumerate(zip(models, ws)):
+        tr = TRACES[kind](duration=duration, base_rate=total_rate * float(w), seed=seed + k)
+        off = k * duration / len(models) if stagger else 0.0
+        merged.extend(((t + off) % duration, m, p, o) for t, p, o in tr)
+    merged.sort()
+    return merged
+
+
 def scale_to_capacity(trace: list[tuple[float, int, int]],
                       target_rate: float) -> list[tuple[float, int, int]]:
     """TraceUpscaler-style: rescale arrival times so the mean request rate

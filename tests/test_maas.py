@@ -1,0 +1,198 @@
+"""MaaS control plane: fleet arbitration, scale-to-zero, cold start,
+idle-model preemption — N models sharing one topology + one O(1) pool."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import topology as tp
+from repro.core.autoscaler import PolicyConfig
+from repro.models import transformer as TF
+from repro.serving import traces
+from repro.serving.engine import InstanceEngine, ServeRequest
+from repro.serving.maas import ACTIVE, FleetPolicy, FleetScheduler, ZERO
+
+CFG = get_config("granite-8b", reduced=True)
+PARAMS = TF.init_params(jax.random.PRNGKey(0), CFG)
+# same architecture under two MaaS identities: the pool, the fleet and the
+# routers key on the model *name*; sharing params keeps the test light
+CFG_A = CFG.replace(name="maas-a")
+CFG_B = CFG.replace(name="maas-b")
+
+
+def _fleet(n_hosts=2, devs=4, fleet_policy=None):
+    topo = tp.add_host_sources(tp.make_cluster(n_hosts, devs, bw_gbps=100.0))
+    fleet = FleetScheduler(topo, policy=fleet_policy or FleetPolicy(idle_to_zero_s=0.5))
+    for cfg in (CFG_A, CFG_B):
+        fleet.add_model(
+            cfg,
+            PARAMS,
+            n_prefill=1,
+            n_decode=1,
+            n_slots=2,
+            max_seq=48,
+            model_bytes=int(50e6),
+            prefill_capacity_tps=200.0,
+            decode_capacity_tps=50.0,
+            policy=PolicyConfig(max_instances=3, kv_upper=0.5, scale_down_timeout_s=0.4),
+        )
+    return topo, fleet
+
+
+def _drain(fleet, t, *, tick=0.01, max_ticks=2000):
+    for _ in range(max_ticks):
+        if fleet.n_outstanding == 0:
+            return t
+        t += tick
+        fleet.tick(t)
+        assert fleet.param_pool.invariant_ok()
+    raise AssertionError(f"{fleet.n_outstanding} requests still outstanding")
+
+
+def test_fleet_lifecycle_serve_zero_cold_start():
+    """One fleet, full serverless cycle: two models serve correct tokens on
+    shared devices; idling parks BOTH at zero (O(1) host copy only, every
+    accelerator free); a late request cold-starts via multicast from the
+    host copy and still decodes bit-identically."""
+    topo, fleet = _fleet()
+    rng = np.random.default_rng(3)
+    prompts_b = [rng.integers(0, CFG.vocab_size, size=7).astype(np.int32) for _ in range(2)]
+
+    t = 0.0
+    for _ in range(4):
+        fleet.submit("maas-a", rng.integers(0, CFG.vocab_size, size=7).astype(np.int32), 5, t)
+    rids_b = [fleet.submit("maas-b", p, 5, t) for p in prompts_b]
+    t = _drain(fleet, t)
+
+    # tokens through the shared fleet == a lone colocated engine
+    ref = InstanceEngine(CFG, PARAMS, n_slots=1, max_seq=48)
+    rt_b = fleet.tenants["maas-b"].runtime
+    for rid, prompt in zip(rids_b, prompts_b):
+        ref.submit(ServeRequest(100 + rid, prompt, 5))
+        (r,) = ref.run_until_done()
+        assert rt_b.completed[rid].out_tokens == r.out_tokens
+
+    # idle past the timeout -> every model drains to zero
+    for _ in range(300):
+        t += 0.05
+        fleet.tick(t)
+        assert fleet.param_pool.invariant_ok()
+        if all(x.state == ZERO for x in fleet.tenants.values()):
+            break
+    assert all(x.state == ZERO for x in fleet.tenants.values())
+    assert all(x.runtime.n_engines == 0 for x in fleet.tenants.values())
+    # all 8 accelerators free; exactly one host copy per model survives
+    assert len(topo.spares()) == 8
+    usage = fleet.param_pool.host_cache_bytes()
+    assert sum(usage.values()) == 2 * int(50e6)
+    assert fleet.stats.scale_to_zero_events >= 2
+
+    # late request -> multicast cold start from the O(1) host copy
+    prompt = prompts_b[0]
+    rid = fleet.submit("maas-b", prompt, 5, t)
+    t = _drain(fleet, t)
+    tb = fleet.tenants["maas-b"]
+    assert tb.state == ACTIVE
+    assert tb.runtime.stats.cold_starts >= 1
+    assert tb.runtime.stats.cold_starts_from_host >= 1
+    assert fleet.stats.cold_starts >= 1
+    ref2 = InstanceEngine(CFG, PARAMS, n_slots=1, max_seq=48)
+    ref2.submit(ServeRequest(999, prompt, 5))
+    (r,) = ref2.run_until_done()
+    assert tb.runtime.completed[rid].out_tokens == r.out_tokens
+    # no request anywhere dropped or token-gapped
+    for x in fleet.tenants.values():
+        _, gapped = x.runtime.router.handoff_report()
+        assert gapped == 0
+
+
+def test_starved_model_preempts_idle_one():
+    """Fleet full, one model bursting, the other idle: arbitration drains
+    the idle model (priority ~0) and hands its devices to the starved one."""
+    policy = FleetPolicy(idle_to_zero_s=1e9)  # only preemption may drain
+    topo, fleet = _fleet(n_hosts=1, devs=4, fleet_policy=policy)
+    assert fleet.free_devices() == []  # 2 models x (1P+1D) fill the host
+
+    rng = np.random.default_rng(5)
+    t = 0.0
+    for _ in range(10):
+        fleet.submit("maas-a", rng.integers(0, CFG.vocab_size, size=16).astype(np.int32), 6, t)
+    max_engines_a = 0
+    for _ in range(2000):
+        if fleet.n_outstanding == 0:
+            break
+        t += 0.01
+        fleet.tick(t)
+        assert fleet.param_pool.invariant_ok()
+        max_engines_a = max(max_engines_a, fleet.tenants["maas-a"].runtime.n_engines)
+    assert fleet.n_outstanding == 0
+    assert fleet.stats.preemptions >= 1
+    assert fleet.tenants["maas-b"].stats.preempted >= 1
+    # the victim gave up everything; the hot model actually grew past its seat
+    assert fleet.tenants["maas-b"].runtime.n_engines == 0
+    assert max_engines_a > 2
+
+
+def test_half_seated_cold_start_recovers():
+    """A cold start that finds only ONE free device seats just a prefill
+    engine; once a second device frees up, arbitration must grant the
+    missing decode seat (zero decode load reads zero pressure, so this
+    needs the explicit empty-phase demand) and the request completes."""
+    topo = tp.add_host_sources(tp.make_cluster(1, 3, bw_gbps=100.0))
+    fleet = FleetScheduler(topo, policy=FleetPolicy(idle_to_zero_s=0.3))
+    fleet.add_model(
+        CFG_A, PARAMS, n_prefill=1, n_decode=1, n_slots=2, max_seq=48,
+        model_bytes=int(50e6), prefill_capacity_tps=200.0, decode_capacity_tps=50.0,
+        policy=PolicyConfig(max_instances=2, kv_upper=0.5, scale_down_timeout_s=0.4),
+    )
+    rng = np.random.default_rng(9)
+    t = 0.0
+    fleet.submit("maas-a", rng.integers(0, CFG.vocab_size, size=7).astype(np.int32), 4, t)
+    t = _drain(fleet, t)
+    while fleet.tenants["maas-a"].state != ZERO:
+        t += 0.05
+        fleet.tick(t)
+
+    # a foreign workload takes two of the three devices
+    taken = [d.id for d in topo.spares()][1:]
+    for i in taken:
+        topo.device(i).role = tp.Role.PREFILL
+    rid = fleet.submit("maas-a", rng.integers(0, CFG.vocab_size, size=7).astype(np.int32), 4, t)
+    for _ in range(20):
+        t += 0.01
+        fleet.tick(t)
+    rt = fleet.tenants["maas-a"].runtime
+    assert rt.n_engines == 1  # half-seated: prefill only
+    assert fleet.n_outstanding == 1  # and the request cannot flow yet
+
+    for i in taken:  # the foreign workload leaves
+        topo.device(i).role = tp.Role.FREE
+    t = _drain(fleet, t)
+    assert rt.completed[rid].out_tokens  # decode seat arrived, request served
+    assert rt.pool.n_provisioned("decode") >= 1
+
+
+def test_zipf_mixer_skew_and_order():
+    w = traces.zipf_weights(4, alpha=1.2)
+    assert w[0] > w[1] > w[2] > w[3] and np.isclose(w.sum(), 1.0)
+    mix = traces.multi_model_mix(["a", "b", "c"], duration=60.0, total_rate=3.0, seed=1)
+    ts = [t for t, *_ in mix]
+    assert ts == sorted(ts) and all(0 <= x < 60.0 for x in ts)
+    counts = {m: 0 for m in "abc"}
+    for _, m, p, o in mix:
+        counts[m] += 1
+        assert p > 0 and o > 0
+    assert counts["a"] > counts["b"] > counts["c"]  # popularity skew
+
+
+def test_fleet_rejects_overcommitted_seating():
+    topo = tp.add_host_sources(tp.make_cluster(1, 2, bw_gbps=100.0))
+    fleet = FleetScheduler(topo)
+    fleet.add_model(CFG_A, PARAMS, n_prefill=1, n_decode=1, n_slots=2, max_seq=48,
+                    model_bytes=int(50e6), prefill_capacity_tps=200.0,
+                    decode_capacity_tps=50.0)
+    with pytest.raises(ValueError, match="free"):
+        fleet.add_model(CFG_B, PARAMS, n_prefill=1, n_decode=1, n_slots=2, max_seq=48,
+                        model_bytes=int(50e6), prefill_capacity_tps=200.0,
+                        decode_capacity_tps=50.0)
