@@ -5,9 +5,18 @@ from __future__ import annotations
 import csv
 import json
 import os
+import sys
 from typing import Iterable
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def smoke() -> bool:
+    """True when benchmarks run in smoke mode (``--smoke`` on the command
+    line or ``BLITZ_SMOKE=1``): tiny configs, paper-headline assertions
+    skipped.  The CI smoke job uses this so benchmark scripts can't silently
+    rot without burning CI minutes on full paper-scale runs."""
+    return "--smoke" in sys.argv or os.environ.get("BLITZ_SMOKE", "") not in ("", "0")
 
 
 def result_path(name: str) -> str:

@@ -29,7 +29,7 @@ sys.path.insert(0, os.path.dirname(__file__))
 import jax
 import numpy as np
 
-from common import markdown_table, write_csv
+from common import markdown_table, smoke, write_csv
 from repro.configs import get_config
 from repro.core import topology as tp
 from repro.core.autoscaler import PolicyConfig
@@ -134,10 +134,11 @@ def run_disagg(cfg, params, workload, *, n_slots: int, model_bytes: int):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-8b")
-    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=4 if smoke() else 16)
     ap.add_argument("--n-slots", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    # tolerate orchestrator flags (--only/--smoke) when run via benchmarks.run
+    args, _ = ap.parse_known_args()
 
     cfg = get_config(args.arch, reduced=True)
     params = TF.init_params(jax.random.PRNGKey(args.seed), cfg)
@@ -146,7 +147,8 @@ def main() -> None:
     header = ["trace", "system", "n", "mean_ttft_ms", "p99_ttft_ms",
               "mean_tbt_ms", "attainment", "wall_s"]
     rows = []
-    for kind in traces.TRACES:
+    kinds = list(traces.TRACES)[:1] if smoke() else list(traces.TRACES)
+    for kind in kinds:
         workload = _workload(kind, args.requests, cfg, args.seed)
         rep, wall = run_colocated(
             cfg, params, workload, n_engines=3, n_slots=args.n_slots

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import calibrated_trace, markdown_table, write_csv, write_json
+from benchmarks.common import calibrated_trace, markdown_table, smoke, write_csv, write_json
 from repro.core import simulator as sim
 
 import dataclasses
@@ -25,10 +25,12 @@ SYSTEMS = {
 PAIRS = [("burstgpt", "8b"), ("azure_code", "24b"), ("azure_conv", "24b")]
 
 
-def run(duration=150.0):
+def run(duration=None):
+    duration = duration or (40.0 if smoke() else 150.0)
     rows = []
     cdfs = {}
-    for trace_name, size in PAIRS:
+    pairs = PAIRS[:1] if smoke() else PAIRS
+    for trace_name, size in pairs:
         prof = sim.profile_for(size)
         tr = calibrated_trace(trace_name, prof, duration=duration, seed=2)
         for name, cfg in SYSTEMS.items():
@@ -56,6 +58,8 @@ def main():
     print(markdown_table(
         ["trace", "model", "system", "mean TTFT", "p99 TTFT", "mean TBT",
          "p99 TBT", "SLO"], rows))
+    if smoke():
+        return rows
     # headline: blitz has the lowest mean TTFT on every trace (ties allowed
     # on azure_conv where S-LLM always cache-hits — paper §6.1)
     for trace_name, _ in PAIRS:

@@ -9,7 +9,7 @@ Each step enables one BlitzScale technique on top of the previous:
 
 from __future__ import annotations
 
-from benchmarks.common import calibrated_trace, markdown_table, write_csv
+from benchmarks.common import calibrated_trace, markdown_table, smoke, write_csv
 from repro.core import simulator as sim
 
 STEPS = [
@@ -20,9 +20,11 @@ STEPS = [
 ]
 
 
-def run(duration=150.0):
+def run(duration=None):
+    duration = duration or (40.0 if smoke() else 150.0)
+    pairs = [("burstgpt", "8b"), ("azure_code", "24b"), ("azure_conv", "24b")]
     rows = []
-    for trace_name, size in [("burstgpt", "8b"), ("azure_code", "24b"), ("azure_conv", "24b")]:
+    for trace_name, size in (pairs[:1] if smoke() else pairs):
         prof = sim.profile_for(size)
         tr = calibrated_trace(trace_name, prof, duration=duration, seed=5)
         for name, cfg in STEPS:
@@ -45,9 +47,10 @@ def main():
         ["trace", "step", "mean TTFT", "p99 TTFT", "p99 TBT", "SLO", "scale(s)"],
         rows))
     # each increment should not regress mean TTFT (aggregate over traces)
-    for trace_name in {r[0] for r in rows}:
-        sub = [r for r in rows if r[0] == trace_name]
-        assert sub[0][2] >= sub[-1][2], sub  # full blitz beats ssd
+    if not smoke():
+        for trace_name in {r[0] for r in rows}:
+            sub = [r for r in rows if r[0] == trace_name]
+            assert sub[0][2] >= sub[-1][2], sub  # full blitz beats ssd
     return rows
 
 

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import markdown_table, write_csv
+from benchmarks.common import markdown_table, smoke, write_csv
 from repro.core import multicast as mc
 from repro.core import topology as tp
 from repro.core.simulator import profile_for
@@ -34,7 +34,7 @@ def run():
     t_allcache = (prof.param_bytes / prof.devices_per_instance) / gbps_to_bytes_per_s(256.0)
 
     # throughput timeline: 1 base instance + scaling instances' contribution
-    ts = np.linspace(0, max(t_blitz, t_allcache) * 1.3, 80)
+    ts = np.linspace(0, max(t_blitz, t_allcache) * 1.3, 20 if smoke() else 80)
     rows = []
     L = prof.n_layers
     for t in ts:

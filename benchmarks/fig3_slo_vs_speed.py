@@ -8,15 +8,16 @@ cache (~0.5-1 s) marginal; network multicast (~0.15-0.6 s) holds SLO.
 
 from __future__ import annotations
 
-from benchmarks.common import calibrated_trace, markdown_table, write_csv
+from benchmarks.common import calibrated_trace, markdown_table, smoke, write_csv
 from repro.core import simulator as sim
 
 
-DELAYS = [0.05, 0.15, 0.5, 1.0, 2.0, 5.0, 12.8]
-MODELS = ["8b", "24b", "72b"]
+DELAYS = [0.05, 0.5, 12.8] if smoke() else [0.05, 0.15, 0.5, 1.0, 2.0, 5.0, 12.8]
+MODELS = ["8b"] if smoke() else ["8b", "24b", "72b"]
 
 
-def run(duration=150.0):
+def run(duration=None):
+    duration = duration or (40.0 if smoke() else 150.0)
     rows = []
     for size in MODELS:
         prof = sim.profile_for(size)
@@ -36,9 +37,10 @@ def main():
     print(markdown_table(
         ["model", "stop(s)", "SLO att.", "mean TTFT", "p99 TTFT"], rows))
     # headline check: longer stops monotonically hurt attainment per model
-    for size in MODELS:
-        att = [r[2] for r in rows if r[0] == size]
-        assert att[0] >= att[-1], (size, att)
+    if not smoke():
+        for size in MODELS:
+            att = [r[2] for r in rows if r[0] == size]
+            assert att[0] >= att[-1], (size, att)
     return rows
 
 

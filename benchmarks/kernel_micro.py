@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import markdown_table, write_csv
+from benchmarks.common import markdown_table, smoke, write_csv
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
@@ -24,11 +24,12 @@ from repro.kernels.rmsnorm import fused_rmsnorm
 def flash_rows():
     rows = []
     key = jax.random.PRNGKey(0)
-    for (b, s, h, kv, d), (bq, bk) in [
+    cases = [
         ((1, 256, 4, 2, 64), (64, 128)),
         ((1, 256, 4, 2, 64), (128, 256)),
         ((2, 128, 8, 8, 128), (64, 64)),
-    ]:
+    ]
+    for (b, s, h, kv, d), (bq, bk) in (cases[:1] if smoke() else cases):
         q = jax.random.normal(key, (b, s, h, d), jnp.float32)
         k = jax.random.normal(key, (b, s, kv, d), jnp.float32)
         v = jax.random.normal(key, (b, s, kv, d), jnp.float32)
@@ -46,7 +47,8 @@ def flash_rows():
 def decode_rows():
     rows = []
     key = jax.random.PRNGKey(1)
-    for (b, s, h, kv, d), bs in [((4, 1024, 8, 2, 64), 256), ((4, 1024, 8, 2, 64), 512)]:
+    dec_cases = [((4, 1024, 8, 2, 64), 256), ((4, 1024, 8, 2, 64), 512)]
+    for (b, s, h, kv, d), bs in (dec_cases[:1] if smoke() else dec_cases):
         q = jax.random.normal(key, (b, h, d), jnp.float32)
         kc = jax.random.normal(key, (b, kv, s, d), jnp.float32)
         vc = jax.random.normal(key, (b, kv, s, d), jnp.float32)
@@ -65,7 +67,8 @@ def decode_rows():
 def rmsnorm_rows():
     rows = []
     key = jax.random.PRNGKey(2)
-    for shape, bn in [((512, 1024), 128), ((512, 1024), 256)]:
+    rn_cases = [((512, 1024), 128), ((512, 1024), 256)]
+    for shape, bn in (rn_cases[:1] if smoke() else rn_cases):
         x = jax.random.normal(key, shape, jnp.float32)
         w = jax.random.normal(key, (shape[-1],), jnp.float32)
         t0 = time.perf_counter()

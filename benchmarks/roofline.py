@@ -69,7 +69,8 @@ def table(recs: list[dict]) -> tuple[list[str], list[list]]:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="single", choices=["single", "multi"])
-    args = ap.parse_args()
+    # tolerate orchestrator flags (--only/--smoke) when run via benchmarks.run
+    args, _ = ap.parse_known_args()
     recs = load_records(args.mesh)
     if not recs:
         print(f"no dry-run records under {DRYRUN_DIR}; run "

@@ -1,13 +1,16 @@
 """Benchmark orchestrator: one entry per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig17]
+    PYTHONPATH=src python -m benchmarks.run [--only fig17] [--smoke]
 
 Each module prints a markdown table, writes CSV/JSON under
-benchmarks/results/, and asserts its paper-headline property."""
+benchmarks/results/, and asserts its paper-headline property.  ``--smoke``
+(also ``BLITZ_SMOKE=1``) runs every suite on a tiny config with headline
+assertions relaxed — the CI job that keeps benchmark scripts from rotting."""
 
 from __future__ import annotations
 
 import argparse
+import os
 import time
 import traceback
 
@@ -18,16 +21,23 @@ SUITES = [
     ("fig19_cache_usage", "Fig.19 O(1) host cache vs S-LLM"),
     ("fig20_ablation", "Fig.20 +Network/+Multicast/+ZigZag ablation"),
     ("fig21_live_timeline", "Fig.21 live-scale throughput timeline"),
+    ("net_contention", "Flow-level data plane: contended/degraded links"),
     ("plan_generation", "§5.1/5.2 plan-gen + ZigZag solver latency"),
     ("kernel_micro", "App.A kernel micro (Pallas vs oracle)"),
     ("roofline", "§Roofline table from dry-run artifacts"),
+    ("disagg_e2e", "disagg vs colocated on real engines"),
+    ("maas_gpu_time", "MaaS fleet sharing vs static (Fig.18 claim)"),
 ]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="run a single suite by name")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny configs, relaxed assertions (CI smoke job)")
     args = ap.parse_args()
+    if args.smoke:
+        os.environ["BLITZ_SMOKE"] = "1"  # read by benchmarks.common.smoke()
 
     failures = []
     for name, desc in SUITES:

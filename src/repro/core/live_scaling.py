@@ -46,15 +46,29 @@ class Phase(enum.Enum):
 
 @dataclasses.dataclass
 class LiveSession:
-    """Host-side state machine coordinating one (source, target) pair."""
+    """Host-side state machine coordinating one (source, target) pair.
+
+    Progress is either constant-rate (``link_bytes_per_s``, the planner's
+    dedicated-link estimate) or — when ``progress_bytes`` is set — read from
+    the flow-level network simulator, so layer arrival reflects whatever
+    contention the parameter stream actually experienced.  Callers using
+    ``progress_bytes`` must advance their FlowSim to ``now`` before asking.
+    """
 
     n_layers: int
     layer_bytes: int
     link_bytes_per_s: float
     started_at: float
     phase: Phase = Phase.REDIRECT
+    # realized bytes delivered to the target (e.g. a FlowSim flow's
+    # ``transferred``); overrides the constant-rate model when provided
+    progress_bytes: Callable[[], float] | None = None
 
     def layers_loaded(self, now: float) -> int:
+        if self.progress_bytes is not None:
+            if self.layer_bytes <= 0:
+                return self.n_layers
+            return min(self.n_layers, int(self.progress_bytes() / self.layer_bytes))
         if self.link_bytes_per_s <= 0:
             return self.n_layers
         dt = max(0.0, now - self.started_at)

@@ -11,14 +11,21 @@ cluster of instances whose autoscaling *data plane* is modelled per system:
                   instance's throughput ramps with the target's loaded
                   layers, reaching 2x at L/2)
   blitz-nolive    same network multicast, stop-the-world
-  blitz-naive     compute network, but serialized unicast from the single
-                  host copy, interference-ignorant ("+Network" ablation)
+  blitz-naive     compute network, but unicast from one copy through a
+                  single egress, interference-ignorant ("+Network")
   sllm            ServerlessLLM: host-cache hit -> PCIe; miss -> SSD; TTL
                   keepalive makes its host cache O(#hosts touched) (Fig.19)
   allcache        ServerlessLLM-optimal: always PCIe from host cache
   fixed           DistServe/vLLM-style: no autoscaling (full / half
                   provisioning)
   ==============  =========================================================
+
+The *network* data planes (multicast, naive unicast) ride the shared
+flow-level simulator ``repro.net.FlowSim``: scale transfers are real flows
+that contend — under max-min fair sharing — with the persistent KVCache
+serving streams of active prefill instances and with each other, over the
+modelled leaf-spine graph (``spine_oversub`` exposes oversubscribed
+spines).  Host-local planes (SSD, PCIe host cache) remain analytic.
 
 Timing model (per instance): prefill is compute-bound
 (``tokens / prefill_tps``), decode is memory-bound (weight pass + per-seq
@@ -43,6 +50,7 @@ from repro.core.autoscaler import Autoscaler, LoadSample, PolicyConfig
 from repro.core.live_scaling import LiveSession
 from repro.core.parameter_pool import ParameterPool
 from repro.core.topology import Role, Topology, gbps_to_bytes_per_s
+from repro.net import Flow, FlowKind, FlowSim, MulticastExecution
 
 # ---------------------------------------------------------------------------
 # Model serving profile
@@ -126,7 +134,8 @@ class Instance:
     iid: int
     phase: str  # 'prefill' | 'decode'
     device_ids: tuple[int, ...]
-    active_from: float  # when it can serve at full capacity
+    active_from: float  # when it can serve at full capacity (inf = loading,
+    #                     resolved when the scale flows actually complete)
     # live scaling: a session attached to the *source* (overloaded) instance;
     # its throughput multiplier ramps 1 -> 2 as the paired target loads layers
     live_boost: LiveSession | None = None
@@ -135,6 +144,9 @@ class Instance:
     active_reqs: dict = dataclasses.field(default_factory=dict)  # rid -> Request
     kv_tokens: int = 0
     retired: bool = False
+    pending_devs: set = dataclasses.field(default_factory=set)  # devices whose
+    #   scale flows have not landed yet (network data planes)
+    scale_start: float = 0.0
 
     def boost(self, now: float) -> float:
         if self.live_boost is None:
@@ -260,6 +272,7 @@ class Simulator:
         pcie_gbps: float = 256.0,
         ssd_gbps: float = 10.0,
         monitor_dt: float = 0.1,
+        spine_oversub: float = 1.0,
         seed: int = 0,
     ):
         self.sys = system
@@ -268,10 +281,16 @@ class Simulator:
         self.pcie_gbps = pcie_gbps
         self.ssd_gbps = ssd_gbps
         self.monitor_dt = monitor_dt
-        self.topo = topo_mod.make_cluster(
-            n_hosts, devs_per_host, bw_gbps=net_gbps,
-            scaleup_per_host=nvlink,
+        # host pseudo-devices join the topology so cold-start unicasts from
+        # the O(1) host copy are real flows on the shared network simulator
+        self.topo = topo_mod.add_host_sources(
+            topo_mod.make_cluster(
+                n_hosts, devs_per_host, bw_gbps=net_gbps,
+                scaleup_per_host=nvlink,
+            ),
+            pcie_gbps=pcie_gbps,
         )
+        self.flowsim = FlowSim(self.topo, spine_oversub=spine_oversub)
         self.pool = ParameterPool(self.topo)
         self.pool.register(prof.name, prof.param_bytes)
         self.rng = np.random.default_rng(seed)
@@ -292,12 +311,14 @@ class Simulator:
         self.gpu_time = 0.0
         self._last_gpu_t = 0.0
         self.timeline: list[tuple[float, int, int]] = []
-        self._naive_src_free = 0.0  # serialized unicast source availability
+        self._serving_flows: dict[int, Flow] = {}  # prefill iid -> KV stream
+        self._dev2inst: dict[int, Instance] = {}  # scale flows in flight
 
         cap_tps = self.prof.prefill_tps
         dec_tps = 32.0 / (self.prof.weight_pass_s + 32 * self.prof.kv_read_s(1024))
+        n_accel = sum(1 for d in self.topo.devices if not d.is_host)
         self.scaler = Autoscaler(
-            PolicyConfig(max_instances=len(self.topo.devices) // prof.devices_per_instance),
+            PolicyConfig(max_instances=n_accel // prof.devices_per_instance),
             prefill_capacity_tps=cap_tps * 0.9,
             decode_capacity_tps=dec_tps,
         )
@@ -305,12 +326,23 @@ class Simulator:
 
     # -- event machinery ----------------------------------------------------
     def push(self, t: float, kind: str, payload: object = None) -> None:
+        if not math.isfinite(t):
+            return  # loading instances have active_from=inf until flows land
         self._eid += 1
-        heapq.heappush(self.events, (t, self._eid, kind, payload))
+        # never schedule into the past — a stale net event must not move
+        # simulation time backwards
+        heapq.heappush(self.events, (max(t, self.now), self._eid, kind, payload))
+
+    def _schedule_net(self) -> None:
+        """Keep a poll event at the flow simulator's next completion time;
+        any flow mutation moves that time, so this is re-armed after each."""
+        t = self.flowsim.next_event_time()
+        if t is not None:
+            self.push(t, "net")
 
     # -- instance management --------------------------------------------------
     def _alloc_devices(self, n_devs: int) -> list[int] | None:
-        spares = self.topo.spares()
+        spares = [d for d in self.topo.spares() if self.flowsim.device_ok(d.id)]
         by_su = self.topo.scaleup_groups([d.id for d in spares])
         ids: list[int] = []
         for su, members in sorted(by_su.items(), key=lambda kv: -len(kv[1])):
@@ -336,6 +368,13 @@ class Simulator:
         inst.retired = True
         self.pool.reclaim(self.prof.name, inst.device_ids)
         self.instances.pop(inst.iid, None)
+        for i in inst.device_ids:
+            if self._dev2inst.get(i) is inst:
+                self._dev2inst.pop(i, None)
+        f = self._serving_flows.pop(inst.iid, None)
+        if f is not None:
+            self.flowsim.remove(f, self.now, abort=False)
+            self._schedule_net()
 
     def _live_instances(self, phase: str) -> list[Instance]:
         return [i for i in self.instances.values() if i.phase == phase and not i.retired]
@@ -345,7 +384,8 @@ class Simulator:
 
     # -- data plane models -----------------------------------------------------
     def _delay_simple(self, dev_ids: list[int]) -> float:
-        """Data-plane seconds for one instance on ssd/hostcache/delay planes."""
+        """Data-plane seconds for one instance on ssd/hostcache/delay planes
+        (host-LOCAL loads — the compute-network planes are real flows)."""
         s = self.sys
         pb = self.prof.param_bytes
         per_dev = pb / self.prof.devices_per_instance
@@ -364,17 +404,15 @@ class Simulator:
                                              len(cache) * pb)
             bw = self.pcie_gbps if hit else self.ssd_gbps
             return per_dev / gbps_to_bytes_per_s(bw)
-        if s.data_plane == "network_naive":
-            # serialized unicast from the single host copy; interference-
-            # ignorant flows run at ~2/3 speed when serving shares the link
-            t = pb / gbps_to_bytes_per_s(self.net_gbps)
-            if s.allow_interference and self._active_instances("prefill"):
-                t *= 1.5
-            start = max(self.now, self._naive_src_free)
-            self._naive_src_free = start + t
-            self.net_scale_bytes += pb
-            return (start + t) - self.now
         raise ValueError(s.data_plane)
+
+    def _host_source_dev(self, host: int | None) -> int:
+        """The pseudo-device holding the O(1) host copy (any host if the
+        pool's record is unavailable)."""
+        for d in self.topo.devices:
+            if d.is_host and (host is None or d.host == host):
+                return d.id
+        raise RuntimeError("no host pseudo-device in topology")
 
     def _do_scale(self, phase: str, n_new: int) -> None:
         """Allocate and start loading n_new instances."""
@@ -393,41 +431,8 @@ class Simulator:
             return
         pb = self.prof.param_bytes
 
-        if self.sys.data_plane == "network_multicast":
-            # ONE Algorithm-11 plan covers the whole batch (multi-chain)
-            for devs in alloc:  # roles already set; undo for planning targets
-                for i in devs:
-                    self.topo.device(i).role = Role.FREE
-                    self.topo.device(i).model = None
-            gpu_srcs, host = self.pool.sources(self.prof.name)
-            tgt_ids = [i for devs in alloc for i in devs]
-            plan = mc.plan_multicast(self.topo, gpu_srcs, tgt_ids, len(tgt_ids))
-            if plan.chains:
-                t = plan.transfer_seconds(pb)
-            else:
-                # no GPU copy anywhere: O(1) host copy seeds the chain
-                bw = min(self.pcie_gbps, self.net_gbps)
-                t = pb / gbps_to_bytes_per_s(bw)
-            self.net_scale_bytes += pb * len(alloc)
-            for devs in alloc:
-                delay = t + self.sys.control_plane_s
-                self.scale_seconds.append(delay)
-                self.scale_events += 1
-                inst = self._activate_instance(phase, devs, self.now + delay)
-                self.push(self.now + delay, "scale_done", inst.iid)
-                if self.sys.live and phase == "prefill":
-                    # pair the loading target with the most-loaded active
-                    # source; the source's throughput ramps with layer loads
-                    srcs = self._active_instances("prefill")
-                    if srcs:
-                        src = max(srcs, key=lambda i: len(i.queue))
-                        if src.live_boost is None:
-                            src.live_boost = LiveSession(
-                                self.prof.n_layers,
-                                pb // self.prof.n_layers,
-                                pb / max(t, 1e-9),
-                                started_at=self.now,
-                            )
+        if self.sys.data_plane in ("network_multicast", "network_naive"):
+            self._do_scale_network(phase, alloc)
             return
 
         for devs in alloc:
@@ -436,6 +441,118 @@ class Simulator:
             self.scale_events += 1
             inst = self._activate_instance(phase, devs, self.now + delay)
             self.push(self.now + delay, "scale_done", inst.iid)
+
+    def _do_scale_network(self, phase: str, alloc: list[list[int]]) -> None:
+        """Compute-network data plane: scale transfers are flows on the
+        shared FlowSim, contending with serving streams and each other;
+        instances activate when their devices' flows actually land."""
+        pb = self.prof.param_bytes
+        for devs in alloc:  # roles already set; undo for planning targets
+            for i in devs:
+                self.topo.device(i).role = Role.FREE
+                self.topo.device(i).model = None
+        gpu_srcs, host = self.pool.sources(self.prof.name)
+        tgt_ids = [i for devs in alloc for i in devs]
+
+        plan = None
+        if self.sys.data_plane == "network_multicast":
+            # ONE Algorithm-11 plan covers the whole batch (multi-chain);
+            # plan_multicast falls back to the O(1) host copy when every
+            # GPU source is pruned or absent (hosts are in the topology).
+            # Planned while the targets are still role-FREE.
+            plan = mc.plan_multicast(
+                self.topo, gpu_srcs, tgt_ids, len(tgt_ids),
+                allow_interference=self.sys.allow_interference,
+            )
+
+        insts: list[Instance] = []
+        for devs in alloc:
+            inst = self._activate_instance(phase, devs, math.inf)
+            inst.pending_devs = set(devs)
+            inst.scale_start = self.now
+            inst.busy_until = math.inf
+            for i in devs:
+                self._dev2inst[i] = inst
+            insts.append(inst)
+            self.scale_events += 1
+        self.net_scale_bytes += pb * len(alloc)
+
+        if plan is not None:
+            t_est = plan.transfer_seconds(pb)
+            if not plan.chains or not math.isfinite(t_est):
+                t_est = pb / gbps_to_bytes_per_s(min(self.pcie_gbps, self.net_gbps))
+            exec_ = MulticastExecution(plan, pb, on_node_ready=self._node_ready)
+            exec_.start(self.flowsim, self.now)
+            uncovered = set(tgt_ids) - set(plan.covered)
+            if self.sys.live and phase == "prefill":
+                # pair loading targets with the most-loaded active sources;
+                # a source's throughput ramps with the target's layer loads
+                for _ in alloc:
+                    srcs = self._active_instances("prefill")
+                    if srcs:
+                        src = max(srcs, key=lambda i: len(i.queue))
+                        if src.live_boost is None:
+                            src.live_boost = LiveSession(
+                                self.prof.n_layers,
+                                pb // self.prof.n_layers,
+                                pb / max(t_est, 1e-9),
+                                started_at=self.now,
+                            )
+        else:  # network_naive: unicast through ONE egress, interference-
+            # ignorant source selection (reads from a serving GPU copy when
+            # one exists — its KV stream shares the same link direction)
+            src = gpu_srcs[0] if gpu_srcs else self._host_source_dev(host)
+            uncovered = set()
+            for inst in insts:
+                self.flowsim.start(
+                    Flow(
+                        FlowKind.COLD_START, src, inst.device_ids[0], float(pb),
+                        on_complete=self._unicast_done, payload=inst.iid,
+                        tag=f"naive:{inst.iid}",
+                    ),
+                    self.now,
+                )
+                # the flow lands on one device; siblings fill over scale-up
+                inst.pending_devs = {inst.device_ids[0]}
+                for i in inst.device_ids[1:]:
+                    self._dev2inst.pop(i, None)
+
+        # targets the planner could not reach at all: PCIe host fallback
+        for i in sorted(uncovered):
+            self.flowsim.start(
+                Flow(
+                    FlowKind.COLD_START, self._host_source_dev(host), i, float(pb),
+                    on_complete=lambda f, t: self._dev_ready(f.dst, t),
+                    tag=f"fallback:{i}",
+                ),
+                self.now,
+            )
+        self._schedule_net()
+
+    # -- scale-flow completion plumbing ---------------------------------------
+    def _node_ready(self, node, t: float) -> None:
+        for i in node.device_ids:
+            self._dev_ready(i, t)
+
+    def _unicast_done(self, flow: Flow, t: float) -> None:
+        inst = self.instances.get(flow.payload)
+        if inst is not None:
+            for i in list(inst.pending_devs):
+                self._dev_ready(i, t)
+
+    def _dev_ready(self, dev: int, t: float) -> None:
+        inst = self._dev2inst.get(dev)
+        if inst is None:
+            return
+        inst.pending_devs.discard(dev)
+        self._dev2inst.pop(dev, None)
+        if inst.pending_devs or inst.retired:
+            return
+        delay = (t - inst.scale_start) + self.sys.control_plane_s
+        self.scale_seconds.append(delay)
+        inst.active_from = t + self.sys.control_plane_s
+        inst.busy_until = inst.active_from
+        self.push(inst.active_from, "scale_done", inst.iid)
 
     # -- serving: prefill ------------------------------------------------------
     def _best_prefill(self) -> Instance | None:
@@ -505,7 +622,36 @@ class Simulator:
             self.push(t_end, "decode_round", inst.iid)
 
     # -- monitoring / autoscaling ---------------------------------------------
+    def _sync_serving_flows(self) -> None:
+        """Keep one persistent KVCache stream (prefill egress -> decode
+        ingress) per active prefill instance on the FlowSim, so scale flows
+        contend with live serving traffic (the Fig. 7b interference that
+        interference-aware planning avoids and 'blitz-naive' suffers)."""
+        if self.sys.data_plane not in ("network_multicast", "network_naive"):
+            return
+        decs = self._active_instances("decode")
+        desired: dict[int, tuple[int, int]] = {}
+        if decs:
+            for inst in self._active_instances("prefill"):
+                dst = decs[inst.iid % len(decs)]
+                desired[inst.iid] = (inst.device_ids[0], dst.device_ids[0])
+        changed = False
+        for iid, f in list(self._serving_flows.items()):
+            if desired.get(iid) != (f.src, f.dst):
+                self.flowsim.remove(f, self.now, abort=False)
+                del self._serving_flows[iid]
+                changed = True
+        for iid, (s, d) in desired.items():
+            if iid not in self._serving_flows:
+                f = Flow(FlowKind.SERVING, s, d, math.inf, tag=f"serving:{iid}")
+                self.flowsim.start(f, self.now)
+                self._serving_flows[iid] = f
+                changed = True
+        if changed:
+            self._schedule_net()
+
     def _monitor(self) -> None:
+        self._sync_serving_flows()
         if not self.sys.autoscale:
             return
         pre = self._live_instances("prefill")
@@ -605,6 +751,11 @@ class Simulator:
                 inst = self.instances.get(payload)
                 if inst:
                     self._decode_round(inst)
+            elif kind == "net":
+                # settle flow completions (their callbacks finalize scale
+                # events) and re-arm at the new next completion time
+                self.flowsim.advance_to(self.now)
+                self._schedule_net()
             elif kind == "scale_done":
                 inst = self.instances.get(payload)
                 if inst is not None:

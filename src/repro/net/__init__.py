@@ -1,0 +1,37 @@
+"""Unified flow-level network data plane.
+
+Everything BLITZSCALE moves over the compute network — multicast chain
+hops, KV-cache migrations, cold-start unicasts, sharded AllGathers and
+background serving streams — rides one congestion-aware flow simulator
+with progressive max-min fair sharing over the ``core.topology`` graph,
+advanced event-by-event.  See ``flowsim.FlowSim`` for the engine and
+``multicast_exec.MulticastExecution`` for plan execution timing.
+"""
+
+from repro.net.flows import Flow, FlowKind
+from repro.net.flowsim import FlowSim, maxmin_rates
+from repro.net.links import (
+    DEV_IN,
+    DEV_OUT,
+    LEAF_DOWN,
+    LEAF_UP,
+    SCALEUP,
+    Link,
+    NetworkModel,
+)
+from repro.net.multicast_exec import MulticastExecution
+
+__all__ = [
+    "Flow",
+    "FlowKind",
+    "FlowSim",
+    "maxmin_rates",
+    "MulticastExecution",
+    "Link",
+    "NetworkModel",
+    "DEV_IN",
+    "DEV_OUT",
+    "LEAF_UP",
+    "LEAF_DOWN",
+    "SCALEUP",
+]

@@ -1,0 +1,79 @@
+"""Typed flows riding the shared flow-level network simulator.
+
+Every byte BLITZSCALE moves over the compute network is one of a small set
+of flow types; unifying them in one simulator is what lets a cold start, a
+live scale-up and a KV-cache drain contend on the same leaf uplink — the
+interference Algorithm 11 is designed to dodge:
+
+  * ``MULTICAST_HOP`` — one hop of a serial forwarding chain (§5.1);
+  * ``ALLGATHER``     — the intra-scale-up AllGather completing a Fig. 14
+                        parallel sharded transfer;
+  * ``KV_MIGRATION``  — frozen KV pages prefill->decode (§2.1, §5.4);
+  * ``COLD_START``    — unicast parameter load from the O(1) host copy (or
+                        an interference-ignorant GPU copy — the "+Network"
+                        ablation baseline);
+  * ``SERVING``       — a persistent background serving stream (size
+                        ``inf``): it never completes, it only takes its
+                        max-min share, modelling live KVCache traffic that
+                        scaling flows must not collide with.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Any, Callable
+
+from repro.net.links import Link
+
+
+class FlowKind(enum.Enum):
+    MULTICAST_HOP = "multicast_hop"
+    ALLGATHER = "allgather"
+    KV_MIGRATION = "kv_migration"
+    COLD_START = "cold_start"
+    SERVING = "serving"
+
+
+@dataclasses.dataclass(eq=False)
+class Flow:
+    """One src->dst transfer; rate is assigned by the simulator's max-min
+    fair sharing and changes whenever the set of competing flows does."""
+
+    kind: FlowKind
+    src: int
+    dst: int
+    size: float  # bytes; math.inf = persistent background flow
+    payload: Any = None
+    on_complete: Callable[["Flow", float], None] | None = None
+    on_abort: Callable[["Flow", float], None] | None = None
+    tag: str = ""
+
+    # -- simulator-managed state --------------------------------------------
+    remaining: float = dataclasses.field(init=False)
+    transferred: float = 0.0
+    rate: float = 0.0  # bytes/s under the current max-min allocation
+    started_at: float | None = None
+    finished_at: float | None = None
+    aborted: bool = False
+    path: list[Link] = dataclasses.field(default_factory=list, repr=False)
+
+    def __post_init__(self):
+        self.remaining = float(self.size)
+
+    @property
+    def background(self) -> bool:
+        return not math.isfinite(self.size)
+
+    @property
+    def done(self) -> bool:
+        return self.finished_at is not None
+
+    def eta(self, now: float) -> float:
+        """Finish time under the CURRENT rate (changes on any flow event)."""
+        if self.done:
+            return self.finished_at
+        if self.rate <= 0.0 or self.background:
+            return math.inf
+        return now + self.remaining / self.rate

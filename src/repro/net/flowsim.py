@@ -1,0 +1,371 @@
+"""Congestion-aware flow-level network simulator (progressive max-min).
+
+One :class:`FlowSim` serves every bandwidth consumer in the repo — multicast
+chain execution, KV-cache migration, cold-start unicast, background serving
+streams — over the directed-link graph of :class:`repro.net.links
+.NetworkModel`.  Rates follow *progressive filling* max-min fairness:
+
+  repeat until every flow is frozen:
+    find the link whose remaining capacity / unfrozen users is smallest;
+    freeze those users at that fair share; subtract it along their paths.
+
+This yields the classic invariants (property-tested in tests/test_net.py):
+per-link conservation (sum of rates <= capacity), and every flow
+bottlenecked on at least one saturated link where no competitor gets more.
+The per-ingress fair-share incast model this replaces is the single-link
+special case: ``n`` flows into one ingress each get ``BW/n``.
+
+Time advances event-by-event: flow start, flow finish, and any scenario
+mutation (degrade / fail / recover) are rate-change events; between events
+every flow progresses linearly at its frozen rate, so integration is exact.
+
+Scenario knobs: ``degrade_link`` (bandwidth multiplier), ``fail_link`` /
+``fail_device`` / ``fail_leaf`` (flows re-route onto a surviving spine
+plane when one exists, else abort via their ``on_abort`` callback — the
+hook Autoscaler/FleetScheduler re-planning hangs off), ``spine_oversub``
+(oversubscribed spines) and ``spine_planes`` (parallel spine planes).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Iterable, Sequence
+
+from repro.core.topology import NVLINK_GBPS, Topology
+from repro.net.flows import Flow, FlowKind
+from repro.net.links import DEV_IN, DEV_OUT, LEAF_DOWN, LEAF_UP, Link, LinkKey, NetworkModel
+
+_EPS = 1e-9
+
+
+def maxmin_rates(paths: Sequence[Sequence[Link]]) -> list[float]:
+    """Progressive-filling max-min allocation for ``paths[i]`` = the links
+    flow ``i`` crosses.  Pure function — shared by the live engine and the
+    non-mutating what-if estimator.  Empty paths get ``inf`` (same-device
+    transfers are instant)."""
+    n = len(paths)
+    rates = [0.0] * n
+    users: dict[LinkKey, list[int]] = {}
+    cap: dict[LinkKey, float] = {}
+    for i, path in enumerate(paths):
+        for l in path:
+            users.setdefault(l.key, []).append(i)
+            cap.setdefault(l.key, l.rate_cap)
+    unfrozen = {i for i in range(n) if paths[i]}
+    for i in range(n):
+        if not paths[i]:
+            rates[i] = math.inf
+    while unfrozen:
+        best_key, best_share = None, math.inf
+        for key, idxs in users.items():
+            live = sum(1 for i in idxs if i in unfrozen)
+            if live == 0:
+                continue
+            share = cap[key] / live
+            if share < best_share:
+                best_key, best_share = key, share
+        if best_key is None:  # pragma: no cover - every flow has links
+            break
+        for i in users[best_key]:
+            if i not in unfrozen:
+                continue
+            rates[i] = best_share
+            unfrozen.discard(i)
+            for l in paths[i]:
+                cap[l.key] = max(0.0, cap[l.key] - best_share)
+    return rates
+
+
+class FlowSim:
+    """The shared flow-level data plane over one cluster topology."""
+
+    def __init__(
+        self,
+        topo: Topology,
+        *,
+        spine_oversub: float = 1.0,
+        spine_planes: int = 1,
+        scaleup_gbps: float = NVLINK_GBPS,
+    ):
+        self.net = NetworkModel(
+            topo,
+            spine_oversub=spine_oversub,
+            spine_planes=spine_planes,
+            scaleup_gbps=scaleup_gbps,
+        )
+        self.flows: list[Flow] = []
+        self.now = 0.0
+        self.completed_count = 0
+        self.aborted_count = 0
+
+    # -- routing -------------------------------------------------------------
+    def _route(self, src: int, dst: int) -> list[Link] | None:
+        """Pick a live path: for cross-leaf flows, the spine plane with the
+        fewest active flows among non-failed planes.  None = no live path."""
+        best, best_load = None, None
+        for p in range(self.net.spine_planes):
+            path = self.net.path(src, dst, plane=p)
+            if any(l.failed for l in path):
+                continue
+            load = sum(
+                1 for f in self.flows for l in f.path if l.key[0] in (LEAF_UP, LEAF_DOWN)
+                and l in path
+            )
+            if best is None or load < best_load:
+                best, best_load = path, load
+            if len(path) <= 2:  # intra-leaf / intra-scale-up: plane-independent
+                break
+        return best
+
+    def device_ok(self, dev: int) -> bool:
+        return self.net.device_ok(dev)
+
+    # -- flow lifecycle ------------------------------------------------------
+    def start(self, flow: Flow, now: float | None = None) -> Flow:
+        """Begin a transfer.  Advances to ``now`` first, so rates of already-
+        running flows are settled before the newcomer claims its share."""
+        self.start_many([flow], now)
+        return flow
+
+    def start_many(self, flows: Sequence[Flow], now: float | None = None) -> list[Flow]:
+        """Begin a batch of transfers with ONE rate recomputation at the end
+        — a multi-chain multicast plan joining a loaded network would
+        otherwise run a full progressive-filling pass per hop."""
+        if now is not None:
+            self.advance_to(now)
+        instant: list[Flow] = []
+        aborted: list[Flow] = []
+        for flow in flows:
+            flow.started_at = self.now
+            path = self._route(flow.src, flow.dst)
+            if path is None:
+                aborted.append(flow)
+                continue
+            flow.path = path
+            if not path or flow.remaining <= 0.0:
+                instant.append(flow)  # same-device (or empty) transfer
+                continue
+            self.flows.append(flow)
+        self._recompute()
+        for flow in instant:
+            flow.transferred = flow.size if math.isfinite(flow.size) else 0.0
+            flow.remaining = 0.0
+            flow.finished_at = self.now
+            self.completed_count += 1
+            if flow.on_complete:
+                flow.on_complete(flow, self.now)
+        for flow in aborted:
+            self._abort(flow)
+        return list(flows)
+
+    def remove(self, flow: Flow, now: float | None = None, *, abort: bool = True) -> None:
+        """Withdraw a flow (e.g. its consumer was drained).  ``abort=True``
+        fires the flow's on_abort callback."""
+        if now is not None:
+            self.advance_to(now)
+        if flow not in self.flows:
+            return
+        self.flows.remove(flow)
+        self._recompute()
+        if abort:
+            self._abort(flow, removed=True)
+
+    def _abort(self, flow: Flow, *, removed: bool = False) -> None:
+        flow.aborted = True
+        self.aborted_count += 1
+        if flow.on_abort:
+            flow.on_abort(flow, self.now)
+
+    # -- time ----------------------------------------------------------------
+    def _done_eps(self, flow: Flow) -> float:
+        return _EPS * max(flow.size, 1.0)
+
+    def advance_to(self, now: float) -> list[Flow]:
+        """Integrate to ``now``, settling completions at their exact event
+        times (rates are re-filled after every completion).  Returns flows
+        completed in completion order."""
+        completed: list[Flow] = []
+        while now - self.now > _EPS:
+            dt_evt = math.inf
+            for f in self.flows:
+                if not f.background and f.rate > 0.0:
+                    dt_evt = min(dt_evt, f.remaining / f.rate)
+            step = min(now - self.now, dt_evt)
+            if step > 0.0:
+                for f in self.flows:
+                    if f.rate > 0.0:
+                        moved = f.rate * step
+                        f.transferred += moved
+                        if not f.background:
+                            f.remaining -= moved
+                self.now += step
+            done = [
+                f for f in self.flows
+                if not f.background and f.remaining <= self._done_eps(f)
+            ]
+            if done:
+                for f in done:
+                    f.remaining = 0.0
+                    f.transferred = float(f.size)
+                    f.finished_at = self.now
+                    self.flows.remove(f)
+                    self.completed_count += 1
+                    completed.append(f)
+                self._recompute()
+                for f in done:
+                    if f.on_complete:
+                        f.on_complete(f, self.now)
+            if step <= 0.0 and not done:
+                break  # nothing can progress (all flows stalled at rate 0)
+        if now > self.now:
+            self.now = now
+        return completed
+
+    def next_event_time(self) -> float | None:
+        """When the earliest in-flight flow finishes under current rates —
+        where a discrete-event driver should schedule its next net poll."""
+        ts = [
+            self.now + f.remaining / f.rate
+            for f in self.flows
+            if not f.background and f.rate > 0.0
+        ]
+        return min(ts) if ts else None
+
+    # -- rate allocation -----------------------------------------------------
+    def _recompute(self) -> None:
+        rates = maxmin_rates([f.path for f in self.flows])
+        for f, r in zip(self.flows, rates):
+            f.rate = r
+
+    # -- scenario knobs ------------------------------------------------------
+    def degrade_link(self, key: LinkKey, multiplier: float, now: float | None = None) -> None:
+        """Scale a link's capacity (1.0 restores it).  Takes effect as a
+        rate-change event at ``now``."""
+        if now is not None:
+            self.advance_to(now)
+        self.net.link(key).degrade = multiplier
+        self._recompute()
+
+    def fail_link(self, key: LinkKey, now: float | None = None) -> list[Flow]:
+        """Fail one directed link.  Flows crossing it re-route onto a
+        surviving spine plane when possible; otherwise they abort (their
+        ``on_abort`` fires — the re-planning hook).  Returns aborted flows."""
+        if now is not None:
+            self.advance_to(now)
+        link = self.net.link(key)
+        link.failed = True
+        return self._evict_failed()
+
+    def fail_device(self, dev: int, now: float | None = None) -> list[Flow]:
+        """Fail a whole device: its NIC links go down AND any flow with the
+        device as an endpoint aborts (scale-up fabric hops included — the
+        accelerator is gone, not just its scale-out port)."""
+        if now is not None:
+            self.advance_to(now)
+        self.net.link((DEV_OUT, dev)).failed = True
+        self.net.link((DEV_IN, dev)).failed = True
+        return self._evict_failed(dead_devs={dev})
+
+    def fail_leaf(self, leaf: int, now: float | None = None) -> list[Flow]:
+        """Fail a whole leaf switch: every member NIC and every uplink."""
+        if now is not None:
+            self.advance_to(now)
+        for d in self.net.topo.devices:
+            if d.leaf == leaf:
+                self.net.link((DEV_OUT, d.id)).failed = True
+                self.net.link((DEV_IN, d.id)).failed = True
+        for p in range(self.net.spine_planes):
+            self.net.link((LEAF_UP, leaf, p)).failed = True
+            self.net.link((LEAF_DOWN, leaf, p)).failed = True
+        return self._evict_failed()
+
+    def recover_link(self, key: LinkKey, now: float | None = None) -> None:
+        if now is not None:
+            self.advance_to(now)
+        self.net.link(key).failed = False
+        self._recompute()
+
+    def recover_device(self, dev: int, now: float | None = None) -> None:
+        if now is not None:
+            self.advance_to(now)
+        self.net.link((DEV_OUT, dev)).failed = False
+        self.net.link((DEV_IN, dev)).failed = False
+        self._recompute()
+
+    def _evict_failed(self, dead_devs: set[int] = frozenset()) -> list[Flow]:
+        aborted: list[Flow] = []
+        for f in list(self.flows):
+            endpoint_dead = f.src in dead_devs or f.dst in dead_devs
+            if not endpoint_dead and not any(l.failed for l in f.path):
+                continue
+            alt = None if endpoint_dead else self._route(f.src, f.dst)
+            if alt is not None and alt:
+                f.path = alt  # re-routed onto a surviving plane
+            else:
+                self.flows.remove(f)
+                aborted.append(f)
+        self._recompute()
+        for f in aborted:
+            self._abort(f, removed=True)
+        return aborted
+
+    # -- what-if estimation (non-mutating) -----------------------------------
+    def estimate_transfer_time(
+        self, src: int, dst: int, nbytes: float, *, max_events: int = 10_000
+    ) -> float:
+        """Seconds a hypothetical src->dst transfer of ``nbytes`` would take
+        under the CURRENT traffic (existing flows run to completion, no new
+        arrivals).  Pure — the live state is untouched.  ``inf`` when no
+        live path exists.  Used by FleetScheduler placement affinity."""
+        path = self._route(src, dst)
+        if path is None:
+            return math.inf
+        if not path or nbytes <= 0:
+            return 0.0
+        paths = [f.path for f in self.flows]
+        rem = [f.remaining for f in self.flows]
+        fin = [not f.background for f in self.flows]
+        paths.append(list(path))
+        rem.append(float(nbytes))
+        fin.append(True)
+        target = len(paths) - 1
+        t = 0.0
+        for _ in range(max_events):
+            rates = maxmin_rates(paths)
+            dt = math.inf
+            for i in range(len(paths)):
+                if fin[i] and rates[i] > 0.0:
+                    dt = min(dt, rem[i] / rates[i])
+            if not math.isfinite(dt):
+                return math.inf  # stalled (zero-capacity link on the path)
+            t += dt
+            done_idx = []
+            for i in range(len(paths)):
+                if rates[i] > 0.0 and fin[i]:
+                    rem[i] -= rates[i] * dt
+                    if rem[i] <= _EPS * max(rem[i] + rates[i] * dt, 1.0):
+                        done_idx.append(i)
+            if target in done_idx:
+                return t
+            for i in reversed(done_idx):
+                del paths[i], rem[i], fin[i]
+                if i < target:
+                    target -= 1
+        return math.inf  # pragma: no cover - event budget exhausted
+
+    # -- introspection -------------------------------------------------------
+    def flows_through(self, key: LinkKey) -> list[Flow]:
+        return [f for f in self.flows if any(l.key == key for l in f.path)]
+
+    def flows_into(self, dev: int, kinds: Iterable[FlowKind] | None = None) -> list[Flow]:
+        ks = set(kinds) if kinds is not None else None
+        return [
+            f for f in self.flows if f.dst == dev and (ks is None or f.kind in ks)
+        ]
+
+    def utilization(self, key: LinkKey) -> float:
+        link = self.net.link(key)
+        if link.rate_cap <= 0.0:
+            return 0.0
+        used = sum(f.rate for f in self.flows_through(key) if math.isfinite(f.rate))
+        return used / link.rate_cap

@@ -1,0 +1,122 @@
+"""Directed-link model of the scale-out network (leaf-spine + scale-up).
+
+The flow simulator shares bandwidth on *directed* links — the paper's
+full-duplex cornerstone (Fig. 7c): a device's egress and ingress are two
+independent links, so opposite-direction flows never contend.  The graph is
+derived from :class:`repro.core.topology.Topology`:
+
+  * every device (accelerator or CPU-host pseudo-device) gets a NIC egress
+    link (``DEV_OUT``) and a NIC ingress link (``DEV_IN``) at its scale-out
+    bandwidth;
+  * every leaf gets per-direction uplinks to the spine (``LEAF_UP`` /
+    ``LEAF_DOWN``), sized at the sum of member NIC bandwidth divided by
+    ``spine_oversub`` — ``spine_oversub=1`` reproduces the planner's
+    non-blocking ECMP assumption (§5.1), larger values model oversubscribed
+    spines; ``spine_planes>1`` splits each uplink into parallel planes so a
+    failed plane can re-route instead of aborting;
+  * every scale-up (NVLink/ICI) domain gets one shared fabric link
+    (``SCALEUP``) at aggregate NVLink bandwidth — intra-domain hops use it
+    instead of the scale-out NICs, so they are near-free but still modelled.
+
+Scenario knobs live on the :class:`Link`: ``degrade`` multiplies capacity
+(a flapping or rate-limited link) and ``failed`` zeroes it (the flow
+simulator re-routes or aborts flows crossing a failed link).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.topology import NVLINK_GBPS, Topology, gbps_to_bytes_per_s
+
+DEV_OUT = "dev_out"  # device NIC egress -> leaf switch
+DEV_IN = "dev_in"  # leaf switch -> device NIC ingress
+LEAF_UP = "leaf_up"  # leaf -> spine (per plane)
+LEAF_DOWN = "leaf_down"  # spine -> leaf (per plane)
+SCALEUP = "scaleup"  # shared NVLink/ICI fabric of one scale-up domain
+
+LinkKey = tuple  # (kind, id) or (kind, id, plane)
+
+
+@dataclasses.dataclass
+class Link:
+    """One directed link with its scenario state."""
+
+    key: LinkKey
+    capacity: float  # bytes/s nominal
+    degrade: float = 1.0  # bandwidth multiplier (degraded-link scenario)
+    failed: bool = False
+
+    @property
+    def rate_cap(self) -> float:
+        return 0.0 if self.failed else self.capacity * self.degrade
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        state = "FAILED" if self.failed else (
+            f"x{self.degrade:g}" if self.degrade != 1.0 else "ok"
+        )
+        return f"Link({self.key}, {self.capacity:.3g} B/s, {state})"
+
+
+class NetworkModel:
+    """The directed-link graph + deterministic path routing."""
+
+    def __init__(
+        self,
+        topo: Topology,
+        *,
+        spine_oversub: float = 1.0,
+        spine_planes: int = 1,
+        scaleup_gbps: float = NVLINK_GBPS,
+    ):
+        if spine_planes < 1:
+            raise ValueError("spine_planes must be >= 1")
+        self.topo = topo
+        self.spine_planes = spine_planes
+        self.links: dict[LinkKey, Link] = {}
+        leaf_bw: dict[int, float] = {}
+        for d in topo.devices:
+            bw = gbps_to_bytes_per_s(d.bw_gbps)
+            self._add((DEV_OUT, d.id), bw)
+            self._add((DEV_IN, d.id), bw)
+            leaf_bw[d.leaf] = leaf_bw.get(d.leaf, 0.0) + bw
+        for leaf, bw in leaf_bw.items():
+            per_plane = bw / spine_oversub / spine_planes
+            for p in range(spine_planes):
+                self._add((LEAF_UP, leaf, p), per_plane)
+                self._add((LEAF_DOWN, leaf, p), per_plane)
+        groups: dict[int, int] = {}
+        for d in topo.devices:
+            if not d.is_host:
+                groups[d.scaleup] = groups.get(d.scaleup, 0) + 1
+        for su, n in groups.items():
+            self._add((SCALEUP, su), gbps_to_bytes_per_s(scaleup_gbps) * n)
+
+    def _add(self, key: LinkKey, capacity: float) -> None:
+        self.links[key] = Link(key, capacity)
+
+    def link(self, key: LinkKey) -> Link:
+        return self.links[key]
+
+    # -- routing -------------------------------------------------------------
+    def path(self, src: int, dst: int, *, plane: int = 0) -> list[Link]:
+        """The (single, deterministic) path of a src->dst flow on spine
+        ``plane``.  Same-device flows have an empty path (instant)."""
+        if src == dst:
+            return []
+        a, b = self.topo.device(src), self.topo.device(dst)
+        if a.scaleup == b.scaleup and not a.is_host and not b.is_host:
+            return [self.links[(SCALEUP, a.scaleup)]]
+        p = [self.links[(DEV_OUT, src)]]
+        if a.leaf != b.leaf:
+            p.append(self.links[(LEAF_UP, a.leaf, plane)])
+            p.append(self.links[(LEAF_DOWN, b.leaf, plane)])
+        p.append(self.links[(DEV_IN, dst)])
+        return p
+
+    def device_ok(self, dev: int) -> bool:
+        """False when the device's NIC (either direction) is failed — such a
+        device cannot be a transfer endpoint and should not be provisioned."""
+        return not (
+            self.links[(DEV_OUT, dev)].failed or self.links[(DEV_IN, dev)].failed
+        )

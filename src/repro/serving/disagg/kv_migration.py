@@ -2,15 +2,17 @@
 
 A finished prefill freezes the request's KV pages (the 1-slot cache pytree
 the engine produced) and ships them to a decode instance over the scale-out
-network.  Transfer time is modelled at the topology's link bandwidth, page-
+network as a :class:`repro.net.Flow` of kind ``KV_MIGRATION`` — page-
 granular like :class:`repro.models.kvcache.PagedKVCache` blocks.
 
-The channel models the *incast* effect that motivates §5.4's mutation
-policy: every flow entering a destination device shares that device's
-ingress link.  A decode instance that is simultaneously a live-scaling
-target (parameters streaming in) halves every migration headed to it —
-which is exactly why BlitzScale mutates an already-parameterised prefill
-instance into a decode instance instead of live-scaling decode directly.
+The channel is a thin adapter over the shared flow-level simulator
+(:class:`repro.net.FlowSim`); the per-ingress fair-share incast model that
+used to live here is deleted.  The *incast* effect that motivates §5.4's
+mutation policy now emerges from max-min sharing: a decode instance that is
+simultaneously a live-scaling target has the parameter multicast hop and
+every migration headed to it contending on the same ingress link — which is
+exactly why BlitzScale mutates an already-parameterised prefill instance
+into a decode instance instead of live-scaling decode directly.
 """
 
 from __future__ import annotations
@@ -22,6 +24,7 @@ import jax
 import numpy as np
 
 from repro.core import topology as topo_mod
+from repro.net import Flow, FlowKind, FlowSim
 from repro.serving.engine import ServeRequest
 
 DEFAULT_PAGE_TOKENS = 16  # tokens per migrated KV page (block granularity)
@@ -89,61 +92,67 @@ def make_payload(
     )
 
 
-@dataclasses.dataclass
-class _Flow:
-    payload: MigrationPayload
-    remaining: float  # bytes left
-    last_t: float
-
-
 class KVMigrationChannel:
-    """Models concurrent KV-page flows sharing per-device ingress links.
+    """KV-page flows on the shared flow-level network simulator.
 
-    ``register_param_stream(dev)`` declares a live-scaling parameter stream
-    entering ``dev`` — it competes with migrations for the same ingress
-    (incast, §5.4).  ``poll(now)`` integrates progress with fair bandwidth
-    sharing and returns payloads that finished arriving."""
+    ``start`` launches one ``KV_MIGRATION`` flow per frozen request;
+    ``poll(now)`` advances the underlying :class:`FlowSim` to ``now`` and
+    returns payloads whose flows finished arriving.  Bandwidth sharing —
+    including incast with live-scaling parameter streams, multicast chains
+    and co-tenant traffic — is entirely the simulator's max-min allocation;
+    a standalone channel builds its own FlowSim, a ClusterRuntime passes
+    the runtime-wide (or, under MaaS, fleet-wide) one."""
 
-    def __init__(self, topo: topo_mod.Topology):
-        self.topo = topo
-        self.flows: list[_Flow] = []
-        self._param_streams: dict[int, int] = {}  # dst device -> n streams
+    def __init__(self, topo: topo_mod.Topology | None = None, *, net: FlowSim | None = None):
+        if net is None:
+            if topo is None:
+                raise ValueError("KVMigrationChannel needs a topology or a FlowSim")
+            net = FlowSim(topo)
+        self.net = net
+        self._arrived: list[MigrationPayload] = []
+        self._failed: list[MigrationPayload] = []
 
-    # -- incast bookkeeping -------------------------------------------------
-    def register_param_stream(self, dev: int) -> None:
-        self._param_streams[dev] = self._param_streams.get(dev, 0) + 1
+    @property
+    def flows(self) -> list[Flow]:
+        """In-flight KV migration flows (on the shared simulator)."""
+        return [f for f in self.net.flows if f.kind is FlowKind.KV_MIGRATION]
 
-    def unregister_param_stream(self, dev: int) -> None:
-        n = self._param_streams.get(dev, 0) - 1
-        if n <= 0:
-            self._param_streams.pop(dev, None)
-        else:
-            self._param_streams[dev] = n
-
-    def ingress_flows(self, dev: int) -> int:
-        """Flows currently sharing ``dev``'s ingress link."""
-        mig = sum(1 for f in self.flows if f.payload.dst_dev == dev)
-        return mig + self._param_streams.get(dev, 0)
+    def inflight_to(self, dev: int) -> int:
+        return sum(1 for f in self.flows if f.dst == dev)
 
     # -- transfer lifecycle -------------------------------------------------
     def start(self, payload: MigrationPayload, now: float) -> None:
-        self.flows.append(_Flow(payload, float(payload.total_bytes), now))
+        self.net.start(
+            Flow(
+                FlowKind.KV_MIGRATION,
+                payload.src_dev,
+                payload.dst_dev,
+                float(payload.total_bytes),
+                payload=payload,
+                on_complete=self._landed,
+                on_abort=self._aborted,
+                tag=f"kv:{payload.rid}",
+            ),
+            now,
+        )
+
+    def _landed(self, flow: Flow, t: float) -> None:
+        self._arrived.append(flow.payload)
+
+    def _aborted(self, flow: Flow, t: float) -> None:
+        # a link/NIC failure killed the transfer: the frozen pages are
+        # still resident on the prefill side, so the caller re-targets
+        # (take_failed) instead of losing the request
+        self._failed.append(flow.payload)
 
     def poll(self, now: float) -> list[MigrationPayload]:
-        """Advance all in-flight transfers to ``now``; return completions."""
-        done: list[MigrationPayload] = []
-        for f in self.flows:
-            dt = max(0.0, now - f.last_t)
-            f.last_t = now
-            if dt == 0.0 and f.remaining > 0:
-                continue
-            bw = topo_mod.gbps_to_bytes_per_s(
-                self.topo.link_bw(f.payload.src_dev, f.payload.dst_dev)
-            )
-            share = max(1, self.ingress_flows(f.payload.dst_dev))
-            f.remaining -= bw / share * dt
-        for f in list(self.flows):
-            if f.remaining <= 0:
-                self.flows.remove(f)
-                done.append(f.payload)
+        """Advance the network to ``now``; return payloads that arrived."""
+        self.net.advance_to(now)
+        done, self._arrived = self._arrived, []
         return done
+
+    def take_failed(self) -> list[MigrationPayload]:
+        """Payloads whose flows were aborted by a failure — the runtime
+        re-targets them onto a surviving decode instance."""
+        out, self._failed = self._failed, []
+        return out

@@ -35,6 +35,7 @@ from repro.core import topology as topo_mod
 from repro.core.autoscaler import Autoscaler, LoadSample, PolicyConfig
 from repro.core.live_scaling import LiveSession
 from repro.core.parameter_pool import ParameterPool
+from repro.net import FlowSim, MulticastExecution
 from repro.serving.disagg import pools as P
 from repro.serving.disagg.kv_migration import KVMigrationChannel, make_payload
 from repro.serving.engine import InstanceEngine, ServeRequest
@@ -56,6 +57,10 @@ class RuntimeStats:
     cold_starts: int = 0
     cold_starts_from_host: int = 0  # re-multicast seeded by the O(1) host copy
     preemptions: int = 0  # engines drained by fleet arbitration, not own policy
+    rejected: int = 0  # requests shed by fleet admission control
+    aborted_param_streams: int = 0  # live-scales killed by a link/NIC failure
+    remigrations: int = 0  # KV migrations re-targeted after a failure
+    re_prefills: int = 0  # requests re-prefilled after their source died
 
 
 class ClusterRuntime:
@@ -77,6 +82,7 @@ class ClusterRuntime:
         prefills_per_engine_per_tick: int = 1,
         param_pool: ParameterPool | None = None,
         allowed_devices: Iterable[int] | None = None,
+        net: FlowSim | None = None,
         verbose: bool = False,
     ):
         self.cfg = cfg
@@ -103,9 +109,16 @@ class ClusterRuntime:
         )
         self.param_pool.register(cfg.name, self.model_bytes)
 
+        # ONE flow-level network simulator carries every transfer this
+        # runtime makes (KV migrations AND live-scaling parameter streams);
+        # under MaaS the fleet passes its shared instance so co-tenant
+        # traffic contends too
+        self.net = net if net is not None else FlowSim(topo)
         self.pool = P.EnginePool(topo)
-        self.channel = KVMigrationChannel(topo)
+        self.channel = KVMigrationChannel(net=self.net)
         self.router = Router()
+        self._live_execs: dict[int, MulticastExecution] = {}  # target dev -> exec
+        self._orphan_migrations: list = []  # failed KV payloads awaiting re-target
         self.autoscaler = Autoscaler(
             policy or PolicyConfig(),
             prefill_capacity_tps=prefill_capacity_tps,
@@ -120,6 +133,7 @@ class ClusterRuntime:
         self.frozen = False
         self._sreqs: dict[int, ServeRequest] = {}
         self.completed: dict[int, ServeRequest] = {}
+        self.rejected: dict[int, ServeRequest | None] = {}  # admission-shed
         self._arrived_tokens = 0  # offered prefill load since last monitor tick
         self._decoded_tokens = 0
         self._last_mon: float | None = None
@@ -150,8 +164,8 @@ class ClusterRuntime:
     def _spare_ids(self) -> list[int]:
         """Free accelerators this runtime may provision — the whole cluster's
         spares for a standalone runtime, only the fleet scheduler's grants
-        when multi-tenanted."""
-        ids = [d.id for d in self.topo.spares()]
+        when multi-tenanted.  Devices with a failed NIC are unusable."""
+        ids = [d.id for d in self.topo.spares() if self.net.device_ok(d.id)]
         if self.allowed_devices is not None:
             ids = [i for i in ids if i in self.allowed_devices]
         return ids
@@ -238,6 +252,23 @@ class ClusterRuntime:
         self._log(f"[fleet] preempted {phase} dev {victim.device_id}")
         return victim.device_id
 
+    def shed_queued(self, n: int, now: float) -> list[int]:
+        """Fleet admission control: reject the ``n`` NEWEST queued requests
+        (the oldest keep their place — they have aged the most against the
+        TTFT SLO).  Rejected requests get an explicit rejection status on
+        the router and stop counting as outstanding.  Returns shed rids."""
+        shed: list[int] = []
+        while n > 0 and self.router.queue:
+            rec = self.router.queue.pop()
+            self.router.reject(rec.rid, now)
+            self.rejected[rec.rid] = self._sreqs.pop(rec.rid, None)
+            self.stats.rejected += 1
+            shed.append(rec.rid)
+            n -= 1
+        if shed:
+            self._log(f"[fleet] admission control shed {len(shed)} request(s)")
+        return shed
+
     # -- request intake -----------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int, now: float) -> int:
         rid = self.router.submit(len(prompt), max_new_tokens, now)
@@ -251,9 +282,10 @@ class ClusterRuntime:
 
     # -- scaling actions ----------------------------------------------------
     def _live_scale(self, phase: str, now: float) -> P.PooledEngine | None:
-        """Provision a spare device with a live-scaling engine: parameters
-        stream in at the multicast plan's modelled bandwidth while the engine
-        ramps ``loaded_layers`` from 0."""
+        """Provision a spare device with a live-scaling engine: the multicast
+        plan's hops become real flows on the shared FlowSim, and the engine
+        ramps ``loaded_layers`` from the *realized* bytes delivered — so KV
+        migrations, co-tenant traffic and degraded links all slow the ramp."""
         spares = self._spare_ids()
         if not spares:
             return None
@@ -266,22 +298,33 @@ class ClusterRuntime:
         if not srcs:
             return None
         plan = mc.plan_multicast(self.topo, srcs, [target], 1)
-        t_load = max(plan.transfer_seconds(self.model_bytes), 1e-6)
+        t_est = max(plan.transfer_seconds(self.model_bytes), 1e-6)
+        exec_ = MulticastExecution(
+            plan,
+            self.model_bytes,
+            on_abort=lambda e, t, dev=target: self._param_stream_aborted(dev, t),
+        )
+        exec_.start(self.net, now)
+        has_inflow = bool(exec_.flows_into(target))
         session = LiveSession(
             n_layers=self.cfg.n_layers,
             layer_bytes=self.model_bytes // max(self.cfg.n_layers, 1),
-            link_bytes_per_s=self.model_bytes / t_load,
+            link_bytes_per_s=self.model_bytes / t_est,
             started_at=now,
+            progress_bytes=(
+                (lambda: exec_.bytes_into(target)) if has_inflow else None
+            ),
         )
         eng = self._new_engine()
         eng.set_loaded_layers(0)
         pe = P.PooledEngine(eng, target, phase, state=P.LOADING, session=session)
         self.pool.add(pe)
-        # reserve the device + declare the incoming parameter stream
+        # reserve the device; the parameter flows themselves occupy its
+        # ingress on the FlowSim (incast with KV migration emerges there)
         self.topo.device(target).role = (
             topo_mod.Role.DECODE if phase == P.DECODE else topo_mod.Role.PREFILL
         )
-        self.channel.register_param_stream(target)
+        self._live_execs[target] = exec_
         self.stats.live_scale_param_bytes += self.model_bytes
         if phase == P.PREFILL:
             self.stats.live_scaled_prefill += 1
@@ -289,9 +332,20 @@ class ClusterRuntime:
             self.stats.direct_decode_scales += 1
         self._log(
             f"[scale] live-scaling {phase} on dev {target} "
-            f"({self.model_bytes/1e6:.0f} MB over {t_load*1e3:.0f} ms modelled)"
+            f"({self.model_bytes/1e6:.0f} MB, ~{t_est*1e3:.0f} ms on dedicated links)"
         )
         return pe
+
+    def _param_stream_aborted(self, dev: int, t: float) -> None:
+        """A link/NIC failure killed the parameter stream mid-live-scale:
+        drain the half-loaded engine (it retires next tick, freeing the
+        device) so the scaling policy re-plans from surviving sources."""
+        self._live_execs.pop(dev, None)
+        self.stats.aborted_param_streams += 1
+        for pe in self.pool.all():
+            if pe.device_id == dev and pe.state == P.LOADING:
+                self.pool.drain(pe)
+                self._log(f"[scale] param stream to dev {dev} aborted -> drain + re-plan")
 
     def _scale_up_decode(self, now: float) -> bool:
         """§5.4: prefer mutating a prefill instance (zero parameter traffic,
@@ -323,24 +377,27 @@ class ClusterRuntime:
     # -- main loop ----------------------------------------------------------
     def tick(self, now: float) -> list[int]:
         """One runtime iteration; returns rids completed this tick."""
-        # 0. retire drained instances; free their devices (idle() holds
+        # 0. advance the shared network to now (flow completions fire here),
+        #    then retire drained instances; free their devices (idle() holds
         #    retirement while KV migrations are still in flight toward one)
+        self.net.advance_to(now)
         for pe in self.pool.retire_idle():
-            if pe.session is not None:
-                # drained mid-live-scale: the parameter stream never finished,
-                # so its incast registration must be torn down here
-                self.channel.unregister_param_stream(pe.device_id)
+            exec_ = self._live_execs.pop(pe.device_id, None)
+            if exec_ is not None:
+                # drained mid-live-scale: withdraw the parameter flows so
+                # they stop occupying the retired device's ingress
+                exec_.cancel(self.net)
             self.param_pool.reclaim(self.cfg.name, [pe.device_id])
             self.stats.retired += 1
             self._log(f"[scale] retired {pe.phase} dev {pe.device_id}")
 
-        # 1. advance live-scaling sessions
+        # 1. advance live-scaling sessions from realized flow progress
         for pe in self.pool.all():
             if pe.state == P.LOADING and pe.session is not None:
                 pe.engine.set_loaded_layers(pe.session.layers_loaded(now))
                 if pe.engine.can_serve_alone():
                     self.pool.activate(pe)
-                    self.channel.unregister_param_stream(pe.device_id)
+                    self._live_execs.pop(pe.device_id, None)
                     self.param_pool.deploy(self.cfg.name, [pe.device_id])
                     self._log(f"[scale] dev {pe.device_id} fully loaded -> active {pe.phase}")
 
@@ -349,10 +406,14 @@ class ClusterRuntime:
             id(pe): self.prefills_per_tick for pe in self.pool.serving(P.PREFILL)
         }
         while self.router.queue:
-            targets = self.pool.migration_targets()
+            targets = [
+                pe for pe in self.pool.migration_targets()
+                if self.net.device_ok(pe.device_id)
+            ]
             dst = min(targets, key=P.PooledEngine.load) if targets else None
             src_cands = [
-                pe for pe in self.pool.serving(P.PREFILL) if budget.get(id(pe), 0) > 0
+                pe for pe in self.pool.serving(P.PREFILL)
+                if budget.get(id(pe), 0) > 0 and self.net.device_ok(pe.device_id)
             ]
             if dst is None or not src_cands:
                 break
@@ -386,6 +447,52 @@ class ClusterRuntime:
             pe = by_dev[payload.dst_dev]
             pe.inflight -= 1
             pe.pending.append(payload)
+
+        # 3.5 failed migrations (link/NIC died mid-flight): the pages are
+        # still frozen on the prefill side — re-target onto a surviving
+        # decode instance, retrying next tick when none is reachable yet
+        for payload in self.channel.take_failed():
+            old = by_dev.get(payload.dst_dev)
+            if old is not None:
+                old.inflight -= 1
+            self._orphan_migrations.append(payload)
+        if self._orphan_migrations:
+            targets = [
+                pe for pe in self.pool.migration_targets()
+                if self.net.device_ok(pe.device_id)
+            ]
+            retry, self._orphan_migrations = self._orphan_migrations, []
+            for payload in retry:
+                if not self.net.device_ok(payload.src_dev):
+                    # the SOURCE NIC died: the frozen pages cannot leave that
+                    # device — un-pin the request and re-run prefill on a
+                    # healthy engine (the re-target path would abort forever)
+                    self.router.handoffs.pop(payload.rid, None)
+                    payload.request.out_tokens = []
+                    self.router.queue.appendleft(self.router.records[payload.rid])
+                    self.stats.re_prefills += 1
+                    self._log(
+                        f"[scale] KV source dev {payload.src_dev} dead -> "
+                        f"re-prefilling rid={payload.rid} elsewhere"
+                    )
+                    continue
+                if not targets:
+                    self._orphan_migrations.append(payload)
+                    continue
+                dst = min(targets, key=P.PooledEngine.load)
+                payload.dst_dev = dst.device_id
+                self.router.begin_handoff(
+                    payload.rid, payload.src_dev, dst.device_id,
+                    len(payload.tokens_at_freeze), now,
+                )
+                self.channel.start(payload, now)
+                self.router.mark_migrating(payload.rid)
+                dst.inflight += 1
+                self.stats.remigrations += 1
+                self._log(
+                    f"[scale] re-targeted failed KV migration rid={payload.rid} "
+                    f"-> dev {dst.device_id}"
+                )
 
         # 4. decode: admit migrated requests, then one batched step per engine
         finished_rids: list[int] = []

@@ -10,7 +10,15 @@ GPU copy).  Starved hot models preempt idle ones.
 """
 
 from repro.serving.maas.fleet import FleetPolicy, FleetScheduler, FleetStats
-from repro.serving.maas.tenant import ACTIVE, DRAINING, ZERO, Tenant, TenantStats
+from repro.serving.maas.tenant import (
+    ACTIVE,
+    DRAINING,
+    LATENCY,
+    THROUGHPUT,
+    ZERO,
+    Tenant,
+    TenantStats,
+)
 
 __all__ = [
     "ACTIVE",
@@ -18,6 +26,8 @@ __all__ = [
     "FleetPolicy",
     "FleetScheduler",
     "FleetStats",
+    "LATENCY",
+    "THROUGHPUT",
     "Tenant",
     "TenantStats",
     "ZERO",

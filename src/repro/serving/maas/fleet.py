@@ -29,10 +29,10 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from collections import deque
 
 from repro.core import topology as topo_mod
 from repro.core.parameter_pool import ParameterPool
+from repro.net import FlowSim
 from repro.serving.disagg import pools as P
 from repro.serving.disagg.runtime import ClusterRuntime
 from repro.serving.maas import tenant as T
@@ -48,6 +48,16 @@ class FleetPolicy:
     max_grant_per_tick: int = 2  # per-tenant grant rate limit
     arbitration: bool = True  # False = static allocation (benchmark baseline)
     scale_to_zero: bool = True
+    # admission control: when the fleet saturates (no grantable device and
+    # every demander above saturation_pressure), queued requests of the
+    # LOWEST SLO class present are shed beyond this depth instead of letting
+    # queues grow unboundedly
+    admission_control: bool = True
+    saturation_pressure: float = 1.0
+    shed_queue_depth: int = 64
+    # placement affinity: FlowSim transfer-time estimates are computed for
+    # at most this many affinity-ranked candidates per grant decision
+    affinity_estimates: int = 8
 
 
 @dataclasses.dataclass
@@ -56,6 +66,7 @@ class FleetStats:
     scale_to_zero_events: int = 0
     preemptions: int = 0
     grants: int = 0  # devices handed out by arbitration
+    rejections: int = 0  # requests shed by admission control
     gpu_seconds: float = 0.0  # fleet-wide device-seconds occupied by engines
 
 
@@ -67,11 +78,17 @@ class FleetScheduler:
         topo: topo_mod.Topology,
         *,
         policy: FleetPolicy | None = None,
+        net: FlowSim | None = None,
         verbose: bool = False,
     ):
         self.topo = topo
         self.policy = policy or FleetPolicy()
         self.param_pool = ParameterPool(topo)
+        # ONE flow-level network simulator for the whole fleet: every
+        # tenant's KV migrations, live-scale parameter streams and cold
+        # starts contend on the same links (and its transfer-time estimates
+        # drive placement affinity)
+        self.net = net if net is not None else FlowSim(topo)
         self.tenants: dict[str, Tenant] = {}
         self.stats = FleetStats()
         self.verbose = verbose
@@ -83,21 +100,37 @@ class FleetScheduler:
 
     # -- fleet membership ----------------------------------------------------
     def free_devices(self) -> list[int]:
-        """Spare accelerators owned by no tenant — the arbitration pool."""
+        """Spare accelerators owned by no tenant — the arbitration pool.
+        Devices with a failed NIC are not grantable."""
         owned: set[int] = set()
         for t in self.tenants.values():
             if t.runtime.allowed_devices:
                 owned |= t.runtime.allowed_devices
-        return [d.id for d in self.topo.spares() if d.id not in owned]
+        return [
+            d.id
+            for d in self.topo.spares()
+            if d.id not in owned and self.net.device_ok(d.id)
+        ]
 
     def add_model(
-        self, cfg, params, *, n_prefill: int = 1, n_decode: int = 1, **runtime_kw
+        self,
+        cfg,
+        params,
+        *,
+        n_prefill: int = 1,
+        n_decode: int = 1,
+        slo_class: str = T.LATENCY,
+        **runtime_kw,
     ) -> Tenant:
         """Register a model with the fleet and seat it on free devices.
 
-        The runtime shares the fleet's topology and ParameterPool; its
-        allowed-device set starts as exactly the initial grant, so it can
-        never provision outside what arbitration hands it."""
+        The runtime shares the fleet's topology, ParameterPool and FlowSim;
+        its allowed-device set starts as exactly the initial grant, so it
+        can never provision outside what arbitration hands it.
+
+        ``slo_class`` is the tenant's SLO tier (``tenant.LATENCY`` or
+        ``tenant.THROUGHPUT``): it weights arbitration priority and decides
+        who is shed first under admission control."""
         if cfg.name in self.tenants:
             raise ValueError(f"model {cfg.name!r} already registered")
         free = self.free_devices()
@@ -115,9 +148,10 @@ class FleetScheduler:
             allowed_devices=free[:need],
             n_prefill=n_prefill,
             n_decode=n_decode,
+            net=self.net,
             **runtime_kw,
         )
-        t = Tenant(cfg.name, rt)
+        t = Tenant(cfg.name, rt, slo_class=slo_class)
         self.tenants[cfg.name] = t
         return t
 
@@ -163,20 +197,29 @@ class FleetScheduler:
                         t.state = T.DRAINING
                         self._log(f"[fleet] {t.name}: idle -> draining to zero")
 
-        # 3. arbitration: free devices go to demanders, hottest first;
-        #    tenants at zero capacity with waiting work cold-start
+        # 3. arbitration: free devices go to demanders, hottest first (class
+        #    weight breaks priority ties); tenants at zero capacity with
+        #    waiting work cold-start.  Grants follow placement affinity:
+        #    devices in leaves holding a surviving GPU copy first, ranked by
+        #    FlowSim-estimated transfer time under current traffic.
         starved: list[tuple[Tenant, int]] = []
         if p.arbitration:
             ranked = sorted(
-                self.tenants.values(), key=Tenant.priority, reverse=True
+                self.tenants.values(),
+                key=lambda t: (t.priority(), t.class_weight),
+                reverse=True,
             )
-            free = deque(self.free_devices())
+            free = set(self.free_devices())
             for t in ranked:
                 want = self._demand(t)
                 granted: list[int] = []
-                while want > 0 and free:
-                    granted.append(free.popleft())
-                    want -= 1
+                if want > 0 and free:
+                    for dev in self._rank_free_for(t, free):
+                        if want <= 0:
+                            break
+                        granted.append(dev)
+                        free.discard(dev)
+                        want -= 1
                 if granted:
                     t.runtime.acquire_devices(granted)
                     self.stats.grants += len(granted)
@@ -205,6 +248,12 @@ class FleetScheduler:
             for t, want in starved:
                 self._preempt_for(t, want, now)
 
+            # 4.5 admission control: fleet-wide saturation (nothing grantable
+            # and every demander above the pressure bound) -> shed the
+            # lowest-class tenants' excess queue with explicit rejections
+            if p.admission_control and not free:
+                self._admission_control(now)
+
         # 5. advance every runtime; finalize drain-to-zero transitions
         finished: dict[str, list[int]] = {}
         for name, t in self.tenants.items():
@@ -222,6 +271,63 @@ class FleetScheduler:
         return finished
 
     # -- internals -----------------------------------------------------------
+    def _rank_free_for(self, t: Tenant, free: set[int]) -> list[int]:
+        """Placement-affinity order for granting ``free`` devices to ``t``:
+        leaves holding a surviving GPU copy of the model first (the cold
+        start / scale-up multicast stays intra-leaf — ROADMAP next-steps
+        item), then by the FlowSim's estimated parameter transfer time from
+        the nearest source under whatever traffic is currently live."""
+        cands = sorted(free)
+        gpu_srcs, host = self.param_pool.sources(t.name)
+        src_devs = gpu_srcs or [
+            d.id for d in self.topo.devices if d.is_host and d.host == host
+        ]
+        if not src_devs:
+            return cands
+        src_leaves = {self.topo.leaf_of(i) for i in src_devs}
+
+        def nearest_src(dev: int) -> int:
+            leaf = self.topo.leaf_of(dev)
+            same = [s for s in src_devs if self.topo.leaf_of(s) == leaf]
+            return same[0] if same else src_devs[0]
+
+        cands.sort(key=lambda d: 0 if self.topo.leaf_of(d) in src_leaves else 1)
+        head = cands[: self.policy.affinity_estimates]
+        est = {
+            d: self.net.estimate_transfer_time(nearest_src(d), d, t.runtime.model_bytes)
+            for d in head
+        }
+        head.sort(
+            key=lambda d: (
+                0 if self.topo.leaf_of(d) in src_leaves else 1,
+                est[d],
+                d,
+            )
+        )
+        return head + cands[len(head):]
+
+    def _admission_control(self, now: float) -> None:
+        p = self.policy
+        demanders = [t for t in self.tenants.values() if t.queue_depth > 0]
+        if not demanders or any(
+            t.runtime.slo_pressure() < p.saturation_pressure for t in demanders
+        ):
+            return  # someone is still comfortably provisioned — not saturated
+        low = min(t.class_weight for t in demanders)
+        for t in sorted(demanders, key=Tenant.priority):
+            if t.class_weight != low:
+                continue  # only the lowest SLO class present is shed
+            over = t.queue_depth - p.shed_queue_depth
+            if over <= 0:
+                continue
+            shed = t.runtime.shed_queued(over, now)
+            t.stats.rejected += len(shed)
+            self.stats.rejections += len(shed)
+            self._log(
+                f"[fleet] {t.name}: saturation -> shed {len(shed)} queued "
+                f"request(s) ({t.slo_class} class)"
+            )
+
     def _needs_cold_start(self, t: Tenant) -> bool:
         rt = t.runtime
         n_prov = rt.pool.n_provisioned(P.PREFILL) + rt.pool.n_provisioned(P.DECODE)

@@ -64,6 +64,8 @@ class RequestRecord:
     ttft: float | None = None
     token_times: list = dataclasses.field(default_factory=list)
     done: bool = False
+    rejected: bool = False  # shed by admission control (never served)
+    rejected_at: float | None = None
 
     def tbts(self) -> list[float]:
         ts = self.token_times
@@ -89,6 +91,7 @@ class Router:
         self.records: dict[int, RequestRecord] = {}
         self.handoffs: dict[int, Handoff] = {}
         self.dropped: list[int] = []  # rids that lost/duplicated tokens in transit
+        self.rejections: list[int] = []  # rids shed by admission control
         self._rid = 0
 
     def submit(self, prompt_tokens: int, max_new_tokens: int, now: float) -> int:
@@ -170,6 +173,15 @@ class Router:
 
     def note_done(self, rid: int) -> None:
         self.records[rid].done = True
+
+    def reject(self, rid: int, now: float) -> None:
+        """Admission control: mark a never-dispatched request as explicitly
+        rejected (the caller removes it from the queue).  Rejected requests
+        are excluded from SLO accounting — they were refused, not violated."""
+        rec = self.records[rid]
+        rec.rejected = True
+        rec.rejected_at = now
+        self.rejections.append(rid)
 
     def slo_report(self, multiplier: float = 5.0) -> SLOReport:
         recs = [r for r in self.records.values() if r.ttft is not None]

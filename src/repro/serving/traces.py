@@ -102,13 +102,19 @@ def multi_model_mix(
     duration: float = 300.0,
     total_rate: float = 4.0,
     alpha: float = 1.2,
-    kind: str = "burstgpt",
+    kind: str | dict = "burstgpt",
     stagger: bool = True,
     seed: int = 0,
 ) -> list[tuple[float, str, int, int]]:
     """Merged fleet trace: each model draws arrivals from ``kind``'s shape
     at a Zipf share of ``total_rate``; returns (t, model, prompt_tokens,
     output_tokens) sorted by time.
+
+    ``kind`` may be a dict mapping model -> trace kind, so per-tenant SLO
+    classes get per-tenant shapes in ONE merged trace — e.g. a latency-tier
+    chatbot on ``burstgpt`` bursts riding alongside a throughput-tier batch
+    model on steady ``azure_conv`` surges (models not in the dict fall back
+    to ``burstgpt``).
 
     ``stagger`` rotates each model's arrivals by a fraction of the horizon
     so bursts peak at *different* times — the premise of fleet sharing:
@@ -117,7 +123,8 @@ def multi_model_mix(
     ws = zipf_weights(len(models), alpha)
     merged: list[tuple[float, str, int, int]] = []
     for k, (m, w) in enumerate(zip(models, ws)):
-        tr = TRACES[kind](duration=duration, base_rate=total_rate * float(w), seed=seed + k)
+        k_kind = kind.get(m, "burstgpt") if isinstance(kind, dict) else kind
+        tr = TRACES[k_kind](duration=duration, base_rate=total_rate * float(w), seed=seed + k)
         off = k * duration / len(models) if stagger else 0.0
         merged.extend(((t + off) % duration, m, p, o) for t, p, o in tr)
     merged.sort()

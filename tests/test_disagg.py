@@ -124,7 +124,9 @@ def _payload(nbytes, src=0, dst=1, rid=1):
 
 
 def test_channel_transfers_at_link_bandwidth():
-    topo = tp.make_cluster(1, 2, bw_gbps=8.0)  # 1e9 bytes/s links
+    # two hosts x 1 dev: distinct scale-up domains, so the transfer rides
+    # the 1e9 bytes/s scale-out NICs (not the NVLink fabric)
+    topo = tp.make_cluster(2, 1, bw_gbps=8.0)
     ch = KVMigrationChannel(topo)
     ch.start(_payload(int(1e9)), now=0.0)
     assert ch.poll(0.5) == []  # half transferred
@@ -134,15 +136,21 @@ def test_channel_transfers_at_link_bandwidth():
 
 def test_incast_param_stream_halves_migration_bandwidth():
     """A live-scaling parameter stream into the destination shares its
-    ingress link — the §5.4 motivation for mutation over direct scaling."""
-    topo = tp.make_cluster(1, 2, bw_gbps=8.0)
+    ingress link — the §5.4 motivation for mutation over direct scaling.
+    The incast now *emerges* from the FlowSim's max-min sharing instead of
+    the old per-ingress stream counter."""
+    from repro.net import Flow, FlowKind
+
+    topo = tp.make_cluster(3, 1, bw_gbps=8.0)
     ch = KVMigrationChannel(topo)
-    ch.register_param_stream(1)
+    param = Flow(FlowKind.MULTICAST_HOP, 2, 1, 5e9)  # parameters streaming in
+    ch.net.start(param, 0.0)
     ch.start(_payload(int(1e9)), now=0.0)
     assert ch.poll(1.01) == []  # would have finished without the incast
-    assert ch.poll(2.01) != []
-    ch.unregister_param_stream(1)
-    assert ch.ingress_flows(1) == 0
+    assert ch.poll(2.01) != []  # ingress shared 50/50 -> 2x the solo time
+    assert ch.inflight_to(1) == 0
+    # the migration finishing returns its ingress share to the param stream
+    assert param.rate == pytest.approx(1e9)
 
 
 # ---------------------------------------------------------------------------
@@ -206,6 +214,98 @@ def test_mutated_engine_keeps_decoding_correctly():
         ref_eng.submit(ServeRequest(100 + rid, prompt, 6))
         (ref,) = ref_eng.run_until_done()
         assert rt.completed[rid].out_tokens == ref.out_tokens
+
+
+def test_failed_nic_aborts_live_scale_and_replans_elsewhere():
+    """A device-link failure mid-live-scale fires the flow abort callback:
+    the half-loaded engine drains, the failed device is never re-picked,
+    and the next live-scale lands on a healthy spare."""
+    # one device per host: the live-scale hop crosses scale-out NICs (an
+    # intra-scale-up hop would finish at NVLink speed before the failure)
+    rt = _runtime(
+        topo=tp.add_host_sources(tp.make_cluster(5, 1, bw_gbps=100.0)),
+        model_bytes=int(500e6),  # ~40 ms on a 100 Gbps NIC
+    )
+    t = 0.01
+    rt.tick(t)
+    pe = rt._live_scale(P.PREFILL, t)
+    assert pe is not None and pe.state == P.LOADING
+    target = pe.device_id
+    # the parameter stream is real flows on the shared FlowSim
+    assert rt.net.flows_into(target)
+    rt.net.fail_device(target, t + 0.01)
+    assert rt.stats.aborted_param_streams == 1
+    assert pe.state == P.DRAINING
+    t += 0.02
+    rt.tick(t)  # retires the aborted engine, frees the device
+    assert all(pe2.device_id != target or pe2.state != P.LOADING for pe2 in rt.pool.all())
+    pe2 = rt._live_scale(P.PREFILL, t)
+    assert pe2 is not None and pe2.device_id != target  # re-planned elsewhere
+
+
+def test_failed_kv_migration_retargets_to_surviving_decode():
+    """A NIC failure mid-KV-migration must not wedge the request: the
+    frozen pages are re-targeted onto a surviving decode instance and the
+    request completes without gaps.  Slow links keep the flow in flight
+    across ticks; huge capacities pin the autoscaler so only the failure
+    path is exercised."""
+    topo = tp.add_host_sources(tp.make_cluster(5, 1, bw_gbps=0.001))
+    rt = _runtime(
+        topo=topo, n_prefill=1, n_decode=2,
+        policy=PolicyConfig(max_instances=3, lower_util=0.0, kv_upper=0.99),
+        prefill_capacity_tps=1e9, decode_capacity_tps=1e9,
+    )
+    rng = np.random.default_rng(11)
+    t = 0.0
+    for _ in range(3):
+        rt.submit(rng.integers(0, CFG.vocab_size, size=8).astype(np.int32), 4, t)
+    failed_dev = None
+    for _ in range(3000):
+        if rt.n_outstanding == 0:
+            break
+        t += 0.01
+        rt.tick(t)
+        if failed_dev is None and rt.channel.flows:
+            failed_dev = rt.channel.flows[0].dst
+            rt.net.fail_device(failed_dev, t)
+    assert failed_dev is not None  # a migration really was in flight
+    assert rt.n_outstanding == 0
+    assert rt.stats.remigrations >= 1
+    _, gapped = rt.router.handoff_report()
+    assert gapped == 0
+    for r in rt.completed.values():
+        assert len(r.out_tokens) == r.max_new_tokens
+
+
+def test_failed_kv_source_reprefills_on_healthy_engine():
+    """Mirror failure: the SOURCE prefill NIC dies mid-migration.  The
+    frozen pages are unreachable, so the request must be un-pinned and
+    re-prefilled on a surviving engine — not re-targeted forever."""
+    topo = tp.add_host_sources(tp.make_cluster(6, 1, bw_gbps=0.001))
+    rt = _runtime(
+        topo=topo, n_prefill=2, n_decode=2,
+        policy=PolicyConfig(max_instances=4, lower_util=0.0, kv_upper=0.99),
+        prefill_capacity_tps=1e9, decode_capacity_tps=1e9,
+    )
+    rng = np.random.default_rng(13)
+    t = 0.0
+    for _ in range(3):
+        rt.submit(rng.integers(0, CFG.vocab_size, size=8).astype(np.int32), 4, t)
+    failed_dev = None
+    for _ in range(3000):
+        if rt.n_outstanding == 0:
+            break
+        t += 0.01
+        rt.tick(t)
+        if failed_dev is None and rt.channel.flows:
+            failed_dev = rt.channel.flows[0].src
+            rt.net.fail_device(failed_dev, t)
+    assert failed_dev is not None
+    assert rt.n_outstanding == 0
+    assert rt.stats.re_prefills >= 1
+    assert rt.stats.remigrations < 100  # no abort/re-target livelock
+    for r in rt.completed.values():
+        assert len(r.out_tokens) == r.max_new_tokens
 
 
 def test_scale_down_drains_and_frees_devices():

@@ -11,7 +11,14 @@ from repro.core.autoscaler import PolicyConfig
 from repro.models import transformer as TF
 from repro.serving import traces
 from repro.serving.engine import InstanceEngine, ServeRequest
-from repro.serving.maas import ACTIVE, FleetPolicy, FleetScheduler, ZERO
+from repro.serving.maas import (
+    ACTIVE,
+    LATENCY,
+    THROUGHPUT,
+    FleetPolicy,
+    FleetScheduler,
+    ZERO,
+)
 
 CFG = get_config("granite-8b", reduced=True)
 PARAMS = TF.init_params(jax.random.PRNGKey(0), CFG)
@@ -184,6 +191,111 @@ def test_zipf_mixer_skew_and_order():
         counts[m] += 1
         assert p > 0 and o > 0
     assert counts["a"] > counts["b"] > counts["c"]  # popularity skew
+
+
+def test_slo_class_weights_arbitration_priority():
+    """At equal load, the latency tier outranks the throughput tier; among
+    cold-starters (both inf) the ranked sort tie-breaks on class weight."""
+    topo = tp.add_host_sources(tp.make_cluster(2, 4, bw_gbps=100.0))
+    fleet = FleetScheduler(topo)
+    kw = dict(n_prefill=1, n_decode=1, n_slots=2, max_seq=48,
+              model_bytes=int(50e6), prefill_capacity_tps=200.0,
+              decode_capacity_tps=50.0)
+    t_lat = fleet.add_model(CFG_A, PARAMS, slo_class=LATENCY, **kw)
+    t_thr = fleet.add_model(CFG_B, PARAMS, slo_class=THROUGHPUT, **kw)
+    assert t_lat.class_weight > t_thr.class_weight
+    rng = np.random.default_rng(2)
+    for m in ("maas-a", "maas-b"):  # identical offered load
+        for _ in range(3):
+            fleet.submit(m, rng.integers(0, CFG.vocab_size, size=8).astype(np.int32), 4, 0.0)
+    fleet.tick(0.05)  # arms the monitor clocks
+    fleet.tick(0.10)  # dt > 0: offered load lands in the monitors
+    assert t_lat.runtime.slo_pressure() > 0
+    assert t_lat.priority() > t_thr.priority()
+
+
+def test_mixed_tier_trace_kinds():
+    """multi_model_mix drives each tier with its own trace shape in one
+    merged, time-ordered trace."""
+    mix = traces.multi_model_mix(
+        ["chat", "batch"],
+        duration=120.0,
+        total_rate=3.0,
+        kind={"chat": "burstgpt", "batch": "azure_conv"},
+        seed=3,
+    )
+    ts = [t for t, *_ in mix]
+    assert ts == sorted(ts)
+    models = {m for _, m, _, _ in mix}
+    assert models == {"chat", "batch"}
+    # azure_conv prompts average ~1024 tokens vs burstgpt's ~512
+    p_chat = np.mean([p for _, m, p, _ in mix if m == "chat"])
+    p_batch = np.mean([p for _, m, p, _ in mix if m == "batch"])
+    assert p_batch > p_chat
+
+
+def test_admission_control_sheds_lowest_class_when_saturated():
+    """Fleet-wide saturation: the throughput-class queue is bounded by
+    explicit rejections instead of growing without limit; every rejected
+    request carries the rejection status and stops counting outstanding."""
+    topo = tp.add_host_sources(tp.make_cluster(1, 2, bw_gbps=100.0))
+    fleet = FleetScheduler(
+        topo,
+        policy=FleetPolicy(
+            idle_to_zero_s=1e9,
+            saturation_pressure=0.0,  # saturation = no grantable device
+            shed_queue_depth=2,
+        ),
+    )
+    fleet.add_model(
+        CFG_A, PARAMS, slo_class=THROUGHPUT, n_prefill=1, n_decode=1,
+        n_slots=2, max_seq=48, model_bytes=int(50e6),
+        prefill_capacity_tps=200.0, decode_capacity_tps=50.0,
+        policy=PolicyConfig(max_instances=1, kv_upper=0.5),
+    )
+    assert fleet.free_devices() == []  # both devices seated -> saturated
+    rng = np.random.default_rng(7)
+    t = 0.0
+    n = 10
+    rids = [
+        fleet.submit("maas-a", rng.integers(0, CFG.vocab_size, size=8).astype(np.int32), 4, t)
+        for _ in range(n)
+    ]
+    t = _drain(fleet, t)
+    rt = fleet.tenants["maas-a"].runtime
+    assert fleet.stats.rejections >= 1
+    assert rt.stats.rejected == fleet.stats.rejections
+    assert fleet.tenants["maas-a"].stats.rejected == fleet.stats.rejections
+    served = sum(1 for r in rids if r in rt.completed)
+    shed = sum(1 for r in rids if r in rt.rejected)
+    assert served + shed == n  # nothing lost, nothing double-counted
+    for r in rids:
+        rec = rt.router.records[r]
+        if r in rt.rejected:
+            assert rec.rejected and rec.rejected_at is not None and rec.ttft is None
+        else:
+            assert not rec.rejected
+
+
+def test_placement_affinity_prefers_leaves_with_gpu_copies():
+    """Grants go to the leaf holding a surviving GPU copy first (multicast
+    stays intra-leaf); within a leaf, FlowSim transfer-time estimates break
+    ties (a degraded NIC ranks last)."""
+    # 2 leaves x 2 devices: leaf 0 = devs {0,1}, leaf 1 = devs {2,3}
+    topo = tp.add_host_sources(tp.make_cluster(2, 2, hosts_per_leaf=1, bw_gbps=100.0))
+    fleet = FleetScheduler(topo)
+    t = fleet.add_model(
+        CFG_A, PARAMS, n_prefill=1, n_decode=0, n_slots=2, max_seq=48,
+        model_bytes=int(50e6), prefill_capacity_tps=200.0, decode_capacity_tps=50.0,
+    )
+    # GPU copy lives on dev 0 (leaf 0); free: 1 (leaf 0), 2 and 3 (leaf 1)
+    assert sorted(fleet.free_devices()) == [1, 2, 3]
+    ranked = fleet._rank_free_for(t, set(fleet.free_devices()))
+    assert ranked[0] == 1  # same-leaf device wins
+    # degrade dev 2's ingress: within leaf 1 the clean NIC now ranks first
+    fleet.net.degrade_link(("dev_in", 2), 0.1)
+    ranked = fleet._rank_free_for(t, set(fleet.free_devices()))
+    assert ranked == [1, 3, 2]
 
 
 def test_fleet_rejects_overcommitted_seating():
