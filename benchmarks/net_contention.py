@@ -3,9 +3,16 @@
 The point of ``repro.net.FlowSim`` is that a multicast scale-up, a KV-cache
 drain and a cold start finally *interact*: this benchmark measures a 4-way
 cross-leaf scale-up (Algorithm-11 plan, executed as flows) and an 8-flow KV
-drain crossing the same leaf uplink, alone and together, plus degraded-link
-and oversubscribed-spine scenarios the old per-module bandwidth models
-could not express.
+drain crossing the same leaf uplink, alone and together, plus degraded-link,
+oversubscribed-spine and latency-model scenarios the old per-module
+bandwidth models could not express.  Two extras since the latency PR:
+
+  * a request-granular KV drain (sizes from a real trace's prompt lengths)
+    run with and without per-hop latency — small per-request messages are
+    latency-dominated, bulk transfers are not;
+  * a leaf-failure scenario through the MaaS FleetScheduler: a leaf dies
+    mid-live-scale and the cold start completes via the scheduler's
+    failure-subscription re-grant, NOT via the runtime drain path.
 
     PYTHONPATH=src python -m benchmarks.net_contention [--smoke]
 """
@@ -22,6 +29,8 @@ KV_BYTES = int(2e9)  # per drained request batch
 MODEL_BYTES = int(16e9)  # 8B model in bf16
 DEGRADE = 0.1  # degraded downlink multiplier
 OVERSUB = 8.0  # oversubscribed-spine factor
+LINK_LAT = 200e-6  # per-hop propagation (200 us)
+SWITCH_LAT = 25e-6  # per switching element (25 us)
 
 
 def _sizes():
@@ -52,10 +61,15 @@ def build():
 
 
 def run_scenario(*, scale: bool, kv: bool, degrade: bool = False,
-                 oversub: float = 1.0):
+                 oversub: float = 1.0, latency: bool = False):
     n_kv, kv_bytes, model_bytes = _sizes()
     topo, srcs, kv_srcs, tgts, kv_dsts = build()
-    sim = FlowSim(topo, spine_oversub=oversub)
+    sim = FlowSim(
+        topo,
+        spine_oversub=oversub,
+        link_latency_s=LINK_LAT if latency else 0.0,
+        switch_latency_s=SWITCH_LAT if latency else 0.0,
+    )
     if degrade:
         sim.degrade_link((LEAF_DOWN, 1, 0), DEGRADE)
 
@@ -81,7 +95,92 @@ def run_scenario(*, scale: bool, kv: bool, degrade: bool = False,
     return t_scale, t_kv
 
 
+def run_per_request_drain(*, latency: bool):
+    """Request-granular serving realism: one KV flow per request, sized from
+    a real trace's prompt lengths.  Small messages are latency-dominated."""
+    from repro.serving import traces
+
+    n_req = 16 if smoke() else 64
+    kv_per_tok = 131072  # the 8b profile's KV bytes/token
+    trace = traces.burstgpt(duration=30.0, base_rate=4.0, seed=5)[:n_req]
+    sizes = traces.kv_volumes(trace, kv_per_tok)
+    topo, srcs, kv_srcs, tgts, kv_dsts = build()
+    sim = FlowSim(
+        topo,
+        link_latency_s=LINK_LAT if latency else 0.0,
+        switch_latency_s=SWITCH_LAT if latency else 0.0,
+    )
+    flows = [
+        sim.start(
+            Flow(FlowKind.SERVING, kv_srcs[k % len(kv_srcs)],
+                 kv_dsts[k % len(kv_dsts)], float(sz), tag=f"req{k}"),
+            0.0,
+        )
+        for k, sz in enumerate(sizes)
+    ]
+    sim.advance_to(1e6)
+    return max(f.finished_at for f in flows)
+
+
+def run_leaf_failure_regrant():
+    """A leaf dies mid-live-scale: the FleetScheduler's failure subscription
+    cancels the doomed grant and re-grants on a surviving leaf inside the
+    SAME event — the cold start completes without the runtime drain path
+    ever retiring an engine.  Returns (seconds to drain all requests,
+    regrants, drain-path retirements of doomed engines)."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core.autoscaler import PolicyConfig
+    from repro.models import transformer as TF
+    from repro.serving.disagg import pools as P
+    from repro.serving.maas import FleetPolicy, FleetScheduler
+
+    cfg = get_config("granite-8b", reduced=True).replace(name="bench-fail")
+    params = TF.init_params(jax.random.PRNGKey(0), cfg)
+    topo = tp.add_host_sources(tp.make_cluster(3, 2, hosts_per_leaf=1, bw_gbps=100.0))
+    fleet = FleetScheduler(topo, policy=FleetPolicy(idle_to_zero_s=1e9))
+    fleet.add_model(
+        cfg, params, n_prefill=1, n_decode=1, n_slots=2, max_seq=48,
+        model_bytes=int(2e9), prefill_capacity_tps=50.0,
+        decode_capacity_tps=20.0,
+        policy=PolicyConfig(max_instances=3, kv_upper=0.5),
+    )
+    rt = fleet.tenants["bench-fail"].runtime
+    rng = np.random.default_rng(3)
+    now = 0.0
+    for _ in range(8 if smoke() else 16):
+        fleet.submit("bench-fail",
+                     rng.integers(0, cfg.vocab_size, size=16).astype(np.int32),
+                     6, now)
+    loading = []
+    for _ in range(400):
+        now += 0.02
+        fleet.tick(now)
+        loading = [pe for pe in rt.pool.all() if pe.state == P.LOADING]
+        if loading:
+            break
+    assert loading, "no live-scale started — cannot exercise the failure path"
+    t_fail = now
+    doomed = {pe.device_id for pe in loading}
+    fleet.net.fail_leaf(topo.leaf_of(loading[0].device_id), now)
+    # everything on the dead leaf was handled INSIDE the failure event by
+    # the subscription; whatever survives in the pool would be the runtime
+    # drain path's to handle — there must be nothing left for it
+    left_for_drain = len(doomed & {pe.device_id for pe in rt.pool.all()})
+    for _ in range(20000):
+        if fleet.n_outstanding == 0:
+            break
+        now += 0.02
+        fleet.tick(now)
+    assert fleet.n_outstanding == 0, "requests lost after leaf failure"
+    return now - t_fail, fleet.stats.failure_regrants, left_for_drain
+
+
 def run():
+    """Raw (unrounded) scenario results: [name, t_scale | None, t_kv | None].
+    Assertions compare these raw floats; rounding happens only for display."""
     rows = []
     cases = [
         ("scale-up alone (dedicated)", dict(scale=True, kv=False)),
@@ -91,35 +190,63 @@ def run():
          dict(scale=True, kv=True, degrade=True)),
         ("contended, spine %gx oversubscribed" % OVERSUB,
          dict(scale=True, kv=True, oversub=OVERSUB)),
+        ("contended + latency (%gus/link, %gus/switch)"
+         % (LINK_LAT * 1e6, SWITCH_LAT * 1e6),
+         dict(scale=True, kv=True, latency=True)),
     ]
     for name, kw in cases:
         t_scale, t_kv = run_scenario(**kw)
+        rows.append([name, t_scale, t_kv])
+    for lat in (False, True):
+        t = run_per_request_drain(latency=lat)
         rows.append([
-            name,
-            round(t_scale, 3) if t_scale is not None else "-",
-            round(t_kv, 3) if t_kv is not None else "-",
+            "per-request kv drain%s" % (" + latency" if lat else ""),
+            None,
+            t,
         ])
     return rows
+
+
+def _display(rows):
+    return [
+        [name,
+         round(t_scale, 4) if t_scale is not None else "-",
+         round(t_kv, 4) if t_kv is not None else "-"]
+        for name, t_scale, t_kv in rows
+    ]
 
 
 def main():
     rows = run()
     write_csv("net_contention.csv",
-              ["scenario", "scale_up_done_s", "kv_drain_done_s"], rows)
+              ["scenario", "scale_up_done_s", "kv_drain_done_s"], _display(rows))
     print(markdown_table(["scenario", "scale-up done (s)", "KV drain done (s)"],
-                         rows))
+                         _display(rows)))
     t_scale_alone, t_kv_alone = rows[0][1], rows[1][2]
-    contended, degraded, oversubbed = rows[2], rows[3], rows[4]
-    # headline: sharing the uplink slows BOTH consumers ...
-    assert contended[1] > t_scale_alone, (contended, t_scale_alone)
+    contended, degraded, oversubbed, latencied = rows[2], rows[3], rows[4], rows[5]
+    perreq, perreq_lat = rows[6], rows[7]
+    # headline: sharing the uplink slows BOTH consumers — the three core
+    # scenarios report DISTINCT scale-up times ...
+    assert t_scale_alone < contended[1] < degraded[1], (rows[:4],)
     assert contended[2] > t_kv_alone, (contended, t_kv_alone)
-    # ... a degraded downlink compounds it ...
-    assert degraded[1] >= contended[1] and degraded[2] >= contended[2], degraded
-    # ... and an oversubscribed spine is at least as slow as non-blocking
+    assert degraded[2] >= contended[2], degraded
+    # ... an oversubscribed spine is at least as slow as non-blocking ...
     assert oversubbed[1] >= contended[1] - 1e-9, (oversubbed, contended)
-    print("\ncontention, degradation and oversubscription all measurably "
-          "stretch scale-up and drain completion — interactions the old "
-          "per-module bandwidth models could not express")
+    # ... latency terms stretch the same contended scenario further ...
+    assert latencied[1] > contended[1] and latencied[2] > contended[2], latencied
+    # ... and request-granular drains are measurably latency-bound
+    assert perreq_lat[2] > perreq[2], (perreq, perreq_lat)
+
+    t_recover, regrants, left_for_drain = run_leaf_failure_regrant()
+    print("\nleaf failure mid-live-scale: all requests served %.2fs after "
+          "the failure via %d scheduler re-grant(s); doomed engines left "
+          "to the runtime drain path: %d" %
+          (t_recover, regrants, left_for_drain))
+    assert regrants >= 1, "failure subscription never re-granted"
+    assert left_for_drain == 0, "runtime drain path handled the failure"
+    print("\ncontention, degradation, oversubscription and latency all "
+          "measurably stretch scale-up and drain completion — and a leaf "
+          "failure completes via scheduler re-grant, not runtime drain")
     return rows
 
 

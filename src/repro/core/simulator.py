@@ -22,10 +22,18 @@ cluster of instances whose autoscaling *data plane* is modelled per system:
 
 The *network* data planes (multicast, naive unicast) ride the shared
 flow-level simulator ``repro.net.FlowSim``: scale transfers are real flows
-that contend — under max-min fair sharing — with the persistent KVCache
-serving streams of active prefill instances and with each other, over the
-modelled leaf-spine graph (``spine_oversub`` exposes oversubscribed
-spines).  Host-local planes (SSD, PCIe host cache) remain analytic.
+that contend — under max-min fair sharing — with serving traffic and with
+each other, over the modelled leaf-spine graph (``spine_oversub`` exposes
+oversubscribed spines; ``link_latency_s`` / ``switch_latency_s`` enable
+the per-hop latency model).  Serving traffic itself is request-granular:
+every finished prefill ships its ACTUAL KV volume (``prompt_tokens x
+kv_bytes_per_token``) as one prefill→decode flow, and the request only
+starts decoding when that flow lands — so scale-up multicast, KV
+migration and real serving traffic contend at request granularity.
+``per_request_kv=False`` restores the PR-3 behaviour (one persistent
+background stream per active prefill instance), the configuration the
+golden-trace regression test pins bit-for-bit.  Host-local planes (SSD,
+PCIe host cache) remain analytic.
 
 Timing model (per instance): prefill is compute-bound
 (``tokens / prefill_tps``), decode is memory-bound (weight pass + per-seq
@@ -119,6 +127,7 @@ class Request:
     prefill_done: float | None = None
     token_times: list[float] = dataclasses.field(default_factory=list)
     decoded: int = 0
+    kv_src: int | None = None  # device whose prefill froze this request's KV
 
     @property
     def ttft(self) -> float | None:
@@ -212,6 +221,8 @@ class SimResult:
     scale_seconds: list[float]  # data-plane durations
     net_scale_bytes: float  # bytes moved over compute network for scaling
     timeline: list[tuple[float, int, int]]  # (t, n_prefill, n_decode)
+    kv_stream_bytes: float = 0.0  # per-request KV serving bytes over the net
+    kv_re_prefills: int = 0  # requests re-prefilled after their KV source died
 
     def ttfts(self) -> np.ndarray:
         return np.array([r.ttft for r in self.requests if r.ttft is not None])
@@ -273,6 +284,9 @@ class Simulator:
         ssd_gbps: float = 10.0,
         monitor_dt: float = 0.1,
         spine_oversub: float = 1.0,
+        link_latency_s: float = 0.0,
+        switch_latency_s: float = 0.0,
+        per_request_kv: bool = True,
         seed: int = 0,
     ):
         self.sys = system
@@ -281,6 +295,12 @@ class Simulator:
         self.pcie_gbps = pcie_gbps
         self.ssd_gbps = ssd_gbps
         self.monitor_dt = monitor_dt
+        # request-granular serving traffic (per-prefill KV flows) only makes
+        # sense on the network data planes; False restores the PR-3 model of
+        # one persistent background stream per active prefill instance
+        self._kv_net = per_request_kv and system.data_plane in (
+            "network_multicast", "network_naive"
+        )
         # host pseudo-devices join the topology so cold-start unicasts from
         # the O(1) host copy are real flows on the shared network simulator
         self.topo = topo_mod.add_host_sources(
@@ -290,7 +310,12 @@ class Simulator:
             ),
             pcie_gbps=pcie_gbps,
         )
-        self.flowsim = FlowSim(self.topo, spine_oversub=spine_oversub)
+        self.flowsim = FlowSim(
+            self.topo,
+            spine_oversub=spine_oversub,
+            link_latency_s=link_latency_s,
+            switch_latency_s=switch_latency_s,
+        )
         self.pool = ParameterPool(self.topo)
         self.pool.register(prof.name, prof.param_bytes)
         self.rng = np.random.default_rng(seed)
@@ -313,6 +338,8 @@ class Simulator:
         self.timeline: list[tuple[float, int, int]] = []
         self._serving_flows: dict[int, Flow] = {}  # prefill iid -> KV stream
         self._dev2inst: dict[int, Instance] = {}  # scale flows in flight
+        self.kv_stream_bytes = 0.0  # per-request KV volume shipped over the net
+        self.kv_re_prefills = 0  # KV source died -> re-prefilled elsewhere
 
         cap_tps = self.prof.prefill_tps
         dec_tps = 32.0 / (self.prof.weight_pass_s + 32 * self.prof.kv_read_s(1024))
@@ -325,6 +352,12 @@ class Simulator:
         self._reqs: dict[int, Request] = {}
 
     # -- event machinery ----------------------------------------------------
+    def schedule(self, t: float, fn) -> None:
+        """Run ``fn(sim)`` at simulation time ``t`` — the hook failure
+        scenarios use (e.g. ``sim.schedule(5.0, lambda s:
+        s.flowsim.fail_device(3, s.now))``)."""
+        self.push(t, "call", fn)
+
     def push(self, t: float, kind: str, payload: object = None) -> None:
         if not math.isfinite(t):
             return  # loading instances have active_from=inf until flows land
@@ -557,6 +590,11 @@ class Simulator:
     # -- serving: prefill ------------------------------------------------------
     def _best_prefill(self) -> Instance | None:
         cands = self._active_instances("prefill")
+        if self._kv_net:
+            # a prefill whose NIC died can compute but never hand off its
+            # KV — only route there when nothing healthy exists at all
+            ok = [i for i in cands if self.flowsim.device_ok(i.device_ids[0])]
+            cands = ok or cands
         if not cands:
             # fall back to the earliest-activating instance (requests queue)
             pend = self._live_instances("prefill")
@@ -588,6 +626,9 @@ class Simulator:
         return min(cands, key=lambda i: i.kv_tokens)
 
     def _admit_waiting(self, inst: Instance) -> None:
+        if self._kv_net:
+            self._drain_waiting()
+            return
         while self.waiting_decode:
             r = self.waiting_decode[0]
             if inst.kv_tokens + r.prompt + r.output > self.prof.kv_capacity_tokens:
@@ -598,6 +639,103 @@ class Simulator:
             inst.kv_tokens += r.prompt + r.output
             if was_empty:
                 self.push(self.now, "decode_round", inst.iid)
+
+    # -- per-request KV serving streams (request-granular network realism) ----
+    def _best_kv_target(self, req: Request) -> Instance | None:
+        """A decode instance with KV room AND a live NIC — a per-request KV
+        stream must actually be deliverable."""
+        need = req.prompt + req.output
+        cands = [i for i in self._active_instances("decode")
+                 if i.kv_tokens + need <= self.prof.kv_capacity_tokens
+                 and self.flowsim.device_ok(i.device_ids[0])]
+        return min(cands, key=lambda i: i.kv_tokens) if cands else None
+
+    def _route_kv(self, r: Request) -> None:
+        dinst = self._best_kv_target(r)
+        if dinst is None:
+            self.waiting_decode.append(r)
+            return
+        self._start_kv_flow(r, dinst)
+
+    def _start_kv_flow(self, r: Request, dinst: Instance) -> None:
+        """Ship the request's ACTUAL KV volume prefill→decode as one flow;
+        the request starts decoding only when the flow lands.  The KV seat
+        on the target is reserved at flow start so concurrent streams never
+        oversubscribe its capacity."""
+        dinst.kv_tokens += r.prompt + r.output
+        src, dst = r.kv_src, dinst.device_ids[0]
+        if src is None or src == dst:
+            self._kv_landed(dinst.iid, r.rid)  # nothing to cross the wire
+            return
+        if not self.flowsim.device_ok(src):
+            # the device holding the frozen KV died: the pages cannot leave
+            # it — pay a real re-prefill on a healthy instance (mirrors the
+            # disagg runtime's re_prefills path), then stream from there
+            dinst.kv_tokens -= r.prompt + r.output
+            self._re_prefill(r)
+            return
+        # function-level import: keeps the one sizing definition in
+        # serving.traces without a module-level core -> serving edge
+        from repro.serving.traces import request_kv_bytes
+
+        size = float(request_kv_bytes(r.prompt, self.prof.kv_bytes_per_token))
+        self.kv_stream_bytes += size
+        self.flowsim.start(
+            Flow(
+                FlowKind.SERVING, src, dst, size,
+                payload=(dinst.iid, r.rid),
+                on_complete=lambda f, t: self.push(t, "kv_landed", f.payload),
+                on_abort=lambda f, t: self.push(t, "kv_failed", f.payload),
+                tag=f"reqkv:{r.rid}",
+            ),
+            self.now,
+        )
+        self._schedule_net()
+
+    def _kv_landed(self, iid: int, rid: int) -> None:
+        r = self._reqs[rid]
+        inst = self.instances.get(iid)
+        if inst is None or inst.retired:
+            self._route_kv(r)  # target died/retired while KV was in flight
+            return
+        was_empty = not inst.active_reqs
+        inst.active_reqs[rid] = r
+        if was_empty:
+            self.push(self.now, "decode_round", inst.iid)
+
+    def _re_prefill(self, r: Request) -> None:
+        """The request's frozen KV sits on a dead device: re-run prefill on
+        a healthy instance (compute-bound, occupies that instance) and
+        re-route the KV stream from its device when done."""
+        cands = [i for i in self._active_instances("prefill")
+                 if self.flowsim.device_ok(i.device_ids[0])]
+        if not cands:
+            # no healthy prefill anywhere: re-enter through the arrival
+            # path, where the request queues, counts as offered load (so
+            # the autoscaler provisions a replacement) and re-prefills
+            # once an instance exists — parking it in waiting_decode would
+            # strand it invisibly forever
+            self.kv_re_prefills += 1
+            self.push(self.now + 0.05, "arrival", r)
+            return
+        inst = min(cands, key=lambda i: (len(i.queue), max(i.busy_until - self.now, 0.0)))
+        service = r.prompt / self.prof.prefill_tps
+        t_done = max(self.now, inst.busy_until) + service
+        inst.busy_until = t_done
+        r.kv_src = inst.device_ids[0]
+        self.kv_re_prefills += 1
+        self.push(t_done, "kv_route", r.rid)
+
+    def _drain_waiting(self) -> None:
+        """Re-route queued requests now that decode capacity (or a reachable
+        target) may have appeared."""
+        for _ in range(len(self.waiting_decode)):
+            r = self.waiting_decode.popleft()
+            dinst = self._best_kv_target(r)
+            if dinst is None:
+                self.waiting_decode.appendleft(r)
+                break
+            self._start_kv_flow(r, dinst)
 
     def _decode_round(self, inst: Instance) -> None:
         if inst.retired or not inst.active_reqs:
@@ -629,6 +767,8 @@ class Simulator:
         interference-aware planning avoids and 'blitz-naive' suffers)."""
         if self.sys.data_plane not in ("network_multicast", "network_naive"):
             return
+        if self._kv_net:
+            return  # serving traffic is per-request KV flows, not streams
         decs = self._active_instances("decode")
         desired: dict[int, tuple[int, int]] = {}
         if decs:
@@ -652,6 +792,8 @@ class Simulator:
 
     def _monitor(self) -> None:
         self._sync_serving_flows()
+        if self._kv_net and self.waiting_decode:
+            self._drain_waiting()  # recover from aborts / retired targets
         if not self.sys.autoscale:
             return
         pre = self._live_instances("prefill")
@@ -736,17 +878,37 @@ class Simulator:
                 inst = self.instances.get(iid)
                 r = self._reqs[rid]
                 r.prefill_done = self.now
-                dinst = self._best_decode(r)
-                if dinst is None:
-                    self.waiting_decode.append(r)
+                if self._kv_net:
+                    # the frozen KV pages live on the prefill device; they
+                    # reach decode as a real flow, not an instant handoff
+                    r.kv_src = inst.device_ids[0] if inst is not None else None
+                    self._route_kv(r)
                 else:
-                    was_empty = not dinst.active_reqs
-                    dinst.active_reqs[r.rid] = r
-                    dinst.kv_tokens += r.prompt + r.output
-                    if was_empty:
-                        self.push(self.now, "decode_round", dinst.iid)
+                    dinst = self._best_decode(r)
+                    if dinst is None:
+                        self.waiting_decode.append(r)
+                    else:
+                        was_empty = not dinst.active_reqs
+                        dinst.active_reqs[r.rid] = r
+                        dinst.kv_tokens += r.prompt + r.output
+                        if was_empty:
+                            self.push(self.now, "decode_round", dinst.iid)
                 if inst:
                     self._kick_prefill(inst)
+            elif kind == "kv_landed":
+                self._kv_landed(*payload)
+            elif kind == "kv_route":
+                self._route_kv(self._reqs[payload])
+            elif kind == "call":
+                payload(self)  # scheduled scenario hook (failures etc.)
+                self._schedule_net()  # the hook may have changed flow rates
+            elif kind == "kv_failed":
+                iid, rid = payload
+                r = self._reqs[rid]
+                dinst = self.instances.get(iid)
+                if dinst is not None and not dinst.retired:
+                    dinst.kv_tokens -= r.prompt + r.output  # release the seat
+                self._route_kv(r)  # re-target on a surviving instance
             elif kind == "decode_round":
                 inst = self.instances.get(payload)
                 if inst:
@@ -788,6 +950,8 @@ class Simulator:
             scale_seconds=self.scale_seconds,
             net_scale_bytes=self.net_scale_bytes,
             timeline=self.timeline,
+            kv_stream_bytes=self.kv_stream_bytes,
+            kv_re_prefills=self.kv_re_prefills,
         )
 
 

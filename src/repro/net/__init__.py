@@ -8,6 +8,20 @@ advanced event-by-event.  See ``flowsim.FlowSim`` for the engine and
 ``multicast_exec.MulticastExecution`` for plan execution timing.
 """
 
+from repro.net.events import (
+    DEVICE_FAILED,
+    DEVICE_RECOVERED,
+    FAILURE_KINDS,
+    FLOW_ABORTED,
+    FLOW_COMPLETED,
+    FLOW_STARTED,
+    LEAF_FAILED,
+    LINK_DEGRADED,
+    LINK_FAILED,
+    LINK_RECOVERED,
+    FlowEventLog,
+    NetEvent,
+)
 from repro.net.flows import Flow, FlowKind
 from repro.net.flowsim import FlowSim, maxmin_rates
 from repro.net.links import (
@@ -25,6 +39,8 @@ __all__ = [
     "Flow",
     "FlowKind",
     "FlowSim",
+    "FlowEventLog",
+    "NetEvent",
     "maxmin_rates",
     "MulticastExecution",
     "Link",
@@ -34,4 +50,14 @@ __all__ = [
     "LEAF_UP",
     "LEAF_DOWN",
     "SCALEUP",
+    "FLOW_STARTED",
+    "FLOW_COMPLETED",
+    "FLOW_ABORTED",
+    "LINK_DEGRADED",
+    "LINK_FAILED",
+    "LINK_RECOVERED",
+    "DEVICE_FAILED",
+    "DEVICE_RECOVERED",
+    "LEAF_FAILED",
+    "FAILURE_KINDS",
 ]

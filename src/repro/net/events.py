@@ -1,0 +1,105 @@
+"""FlowSim event-subscription API + serializable flow-event log.
+
+The flow simulator used to talk to its consumers only through per-flow
+callbacks (``on_complete`` / ``on_abort``) — enough for the party that
+*started* a flow, but invisible to everyone else.  The control planes need
+more: the FleetScheduler wants to know about a leaf failure the instant it
+happens (not one tick later, when the victim runtime has drained its
+half-loaded engine), and the regression harness wants the full event
+stream of a seeded run to diff against a golden file.
+
+``FlowSim.subscribe`` delivers every :class:`NetEvent` to every subscriber,
+in simulation order:
+
+  * ``FLOW_STARTED`` / ``FLOW_COMPLETED`` / ``FLOW_ABORTED`` — one per flow
+    lifecycle edge (per-flow callbacks fire first, then subscribers see the
+    settled world);
+  * ``LINK_DEGRADED`` / ``LINK_FAILED`` / ``LINK_RECOVERED`` and
+    ``DEVICE_FAILED`` / ``DEVICE_RECOVERED`` / ``LEAF_FAILED`` — scenario
+    mutations.  Failure events are emitted AFTER the evicted flows' aborts
+    have settled, so a subscriber reacting to ``LEAF_FAILED`` observes a
+    consistent post-failure network (re-routes applied, doomed flows gone).
+
+:class:`FlowEventLog` is the canonical subscriber for the golden-trace
+regression tests: it renders each event as one deterministic text line
+(``repr`` floats — shortest round-trip representation, so a golden diff is
+bit-for-bit on event times).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.net.flows import Flow
+    from repro.net.links import LinkKey
+
+FLOW_STARTED = "flow_started"
+FLOW_COMPLETED = "flow_completed"
+FLOW_ABORTED = "flow_aborted"
+LINK_DEGRADED = "link_degraded"
+LINK_FAILED = "link_failed"
+LINK_RECOVERED = "link_recovered"
+DEVICE_FAILED = "device_failed"
+DEVICE_RECOVERED = "device_recovered"
+LEAF_FAILED = "leaf_failed"
+
+#: the event kinds a placement control plane should re-plan on
+FAILURE_KINDS = frozenset({LINK_FAILED, DEVICE_FAILED, LEAF_FAILED})
+
+
+@dataclasses.dataclass(frozen=True)
+class NetEvent:
+    """One observable network event, stamped with simulation time."""
+
+    kind: str
+    t: float
+    flow: "Flow | None" = None
+    link_key: "LinkKey | None" = None
+    device: int | None = None
+    leaf: int | None = None
+
+    def render(self) -> str:
+        """One deterministic text line (golden-trace serialization)."""
+        parts = [repr(float(self.t)), self.kind]
+        if self.flow is not None:
+            f = self.flow
+            parts.append(
+                f"{f.kind.value}[{f.tag or '-'}] {f.src}->{f.dst} "
+                f"{repr(float(f.size))}"
+            )
+        if self.link_key is not None:
+            parts.append("link=" + ":".join(str(x) for x in self.link_key))
+        if self.device is not None:
+            parts.append(f"dev={self.device}")
+        if self.leaf is not None:
+            parts.append(f"leaf={self.leaf}")
+        return " ".join(parts)
+
+
+class FlowEventLog:
+    """Subscriber that accumulates rendered event lines.
+
+    Usage::
+
+        log = FlowEventLog()
+        sim.subscribe(log)
+        ...  # run the scenario
+        assert log.lines() == golden_file_lines
+    """
+
+    def __init__(self):
+        self.events: list[NetEvent] = []
+
+    def __call__(self, ev: NetEvent) -> None:
+        self.events.append(ev)
+
+    def lines(self) -> list[str]:
+        return [ev.render() for ev in self.events]
+
+    def dump(self) -> str:
+        return "\n".join(self.lines()) + "\n"
+
+    def count(self, kind: str) -> int:
+        return sum(1 for ev in self.events if ev.kind == kind)

@@ -12,10 +12,15 @@ interference Algorithm 11 is designed to dodge:
   * ``COLD_START``    — unicast parameter load from the O(1) host copy (or
                         an interference-ignorant GPU copy — the "+Network"
                         ablation baseline);
-  * ``SERVING``       — a persistent background serving stream (size
-                        ``inf``): it never completes, it only takes its
-                        max-min share, modelling live KVCache traffic that
-                        scaling flows must not collide with.
+  * ``SERVING``       — live KVCache serving traffic that scaling flows
+                        must not collide with.  Request-granular since the
+                        latency-model PR: one finite flow per finished
+                        prefill, sized at the request's ACTUAL KV volume
+                        (``prompt_tokens x kv_bytes_per_token``).  A size of
+                        ``math.inf`` still denotes the legacy persistent
+                        background stream (it never completes, it only takes
+                        its max-min share) — the PR-3 configuration the
+                        golden-trace regression test pins.
 """
 
 from __future__ import annotations
@@ -49,6 +54,12 @@ class Flow:
     on_complete: Callable[["Flow", float], None] | None = None
     on_abort: Callable[["Flow", float], None] | None = None
     tag: str = ""
+    # extra first-byte latency charged on top of the routed path's own
+    # propagation + switching terms — multicast executions use it to give
+    # chain hop k the cumulative latency of its upstream hops (a pipelined
+    # forwarding chain cannot deliver byte 0 at depth k before k store-and-
+    # forward stages have elapsed)
+    extra_latency_s: float = 0.0
 
     # -- simulator-managed state --------------------------------------------
     remaining: float = dataclasses.field(init=False)
@@ -57,6 +68,11 @@ class Flow:
     started_at: float | None = None
     finished_at: float | None = None
     aborted: bool = False
+    # first-byte setup: while ``active_at`` is in the future the flow is
+    # propagating (rate 0, contends with nobody); None = active immediately
+    # (the zero-latency configuration never sets it, keeping that code path
+    # bit-for-bit identical to the pure bandwidth model)
+    active_at: float | None = None
     path: list[Link] = dataclasses.field(default_factory=list, repr=False)
 
     def __post_init__(self):

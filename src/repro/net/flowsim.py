@@ -19,19 +19,34 @@ Time advances event-by-event: flow start, flow finish, and any scenario
 mutation (degrade / fail / recover) are rate-change events; between events
 every flow progresses linearly at its frozen rate, so integration is exact.
 
+Latency terms (``link_latency_s`` per-hop propagation, ``switch_latency_s``
+per switching element) compose with the bandwidth shares as first-byte
+setup time: a starting flow spends its path latency *propagating* — rate
+zero, contending with nobody — and only then claims its max-min share, so
+an uncontended transfer takes ``latency + size/bandwidth`` exactly.  Both
+terms default to zero, in which case behaviour (and floating-point
+arithmetic) is identical to the pure bandwidth-sharing model.
+
 Scenario knobs: ``degrade_link`` (bandwidth multiplier), ``fail_link`` /
 ``fail_device`` / ``fail_leaf`` (flows re-route onto a surviving spine
 plane when one exists, else abort via their ``on_abort`` callback — the
 hook Autoscaler/FleetScheduler re-planning hangs off), ``spine_oversub``
 (oversubscribed spines) and ``spine_planes`` (parallel spine planes).
+
+Every lifecycle edge and scenario mutation is also broadcast to
+``subscribe``d observers as a :class:`repro.net.events.NetEvent` — the
+channel the FleetScheduler uses to react to failures immediately and the
+golden-trace regression harness uses to diff seeded runs.
 """
 
 from __future__ import annotations
 
 import math
-from typing import Iterable, Sequence
+from typing import Callable, Iterable, Sequence
 
 from repro.core.topology import NVLINK_GBPS, Topology
+from repro.net import events as ev
+from repro.net.events import NetEvent
 from repro.net.flows import Flow, FlowKind
 from repro.net.links import DEV_IN, DEV_OUT, LEAF_DOWN, LEAF_UP, Link, LinkKey, NetworkModel
 
@@ -86,17 +101,49 @@ class FlowSim:
         spine_oversub: float = 1.0,
         spine_planes: int = 1,
         scaleup_gbps: float = NVLINK_GBPS,
+        link_latency_s: float = 0.0,
+        switch_latency_s: float = 0.0,
     ):
         self.net = NetworkModel(
             topo,
             spine_oversub=spine_oversub,
             spine_planes=spine_planes,
             scaleup_gbps=scaleup_gbps,
+            link_latency_s=link_latency_s,
+            switch_latency_s=switch_latency_s,
         )
         self.flows: list[Flow] = []
         self.now = 0.0
         self.completed_count = 0
         self.aborted_count = 0
+        self._subscribers: list[Callable[[NetEvent], None]] = []
+
+    # -- event subscription --------------------------------------------------
+    def subscribe(self, cb: Callable[[NetEvent], None]) -> Callable:
+        """Deliver every :class:`NetEvent` to ``cb`` in simulation order.
+        Returns ``cb`` so ``sim.subscribe(FlowEventLog())`` reads naturally."""
+        self._subscribers.append(cb)
+        return cb
+
+    def unsubscribe(self, cb: Callable[[NetEvent], None]) -> None:
+        if cb in self._subscribers:
+            self._subscribers.remove(cb)
+
+    def _emit(self, kind: str, **kw) -> None:
+        if not self._subscribers:
+            return
+        event = NetEvent(kind, self.now, **kw)
+        for cb in list(self._subscribers):
+            cb(event)
+
+    # -- latency -------------------------------------------------------------
+    def route_latency(self, src: int, dst: int) -> float:
+        """Nominal (plane-0) first-byte latency of a src->dst path — what a
+        multicast planner should budget per chain hop."""
+        return self.net.path_latency(self.net.path(src, dst, plane=0))
+
+    def _flow_latency(self, flow: Flow) -> float:
+        return self.net.path_latency(flow.path) + flow.extra_latency_s
 
     # -- routing -------------------------------------------------------------
     def _route(self, src: int, dst: int) -> list[Link] | None:
@@ -137,7 +184,8 @@ class FlowSim:
         aborted: list[Flow] = []
         for flow in flows:
             flow.started_at = self.now
-            path = self._route(flow.src, flow.dst)
+            self._emit(ev.FLOW_STARTED, flow=flow)  # every abort/completion
+            path = self._route(flow.src, flow.dst)  # has a matching start
             if path is None:
                 aborted.append(flow)
                 continue
@@ -145,6 +193,9 @@ class FlowSim:
             if not path or flow.remaining <= 0.0:
                 instant.append(flow)  # same-device (or empty) transfer
                 continue
+            lat = self._flow_latency(flow)
+            if lat > 0.0:
+                flow.active_at = self.now + lat  # first-byte setup
             self.flows.append(flow)
         self._recompute()
         for flow in instant:
@@ -154,6 +205,7 @@ class FlowSim:
             self.completed_count += 1
             if flow.on_complete:
                 flow.on_complete(flow, self.now)
+            self._emit(ev.FLOW_COMPLETED, flow=flow)
         for flow in aborted:
             self._abort(flow)
         return list(flows)
@@ -175,33 +227,55 @@ class FlowSim:
         self.aborted_count += 1
         if flow.on_abort:
             flow.on_abort(flow, self.now)
+        self._emit(ev.FLOW_ABORTED, flow=flow)
 
     # -- time ----------------------------------------------------------------
     def _done_eps(self, flow: Flow) -> float:
         return _EPS * max(flow.size, 1.0)
 
+    def _activate_pending(self) -> bool:
+        """Flip flows whose first-byte setup latency has elapsed into the
+        contending set.  Returns True when any activation happened (rates
+        were re-filled)."""
+        hit = [
+            f for f in self.flows
+            if f.active_at is not None and f.active_at - self.now <= _EPS
+        ]
+        if not hit:
+            return False
+        for f in hit:
+            f.active_at = None
+        self._recompute()
+        return True
+
     def advance_to(self, now: float) -> list[Flow]:
-        """Integrate to ``now``, settling completions at their exact event
-        times (rates are re-filled after every completion).  Returns flows
-        completed in completion order."""
+        """Integrate to ``now``, settling completions (and latency-model
+        activations) at their exact event times (rates are re-filled after
+        every event).  Returns flows completed in completion order."""
         completed: list[Flow] = []
+        self._activate_pending()
         while now - self.now > _EPS:
             dt_evt = math.inf
             for f in self.flows:
-                if not f.background and f.rate > 0.0:
+                if f.active_at is not None:
+                    dt_evt = min(dt_evt, f.active_at - self.now)
+                elif not f.background and f.rate > 0.0:
                     dt_evt = min(dt_evt, f.remaining / f.rate)
             step = min(now - self.now, dt_evt)
             if step > 0.0:
                 for f in self.flows:
-                    if f.rate > 0.0:
+                    if f.active_at is None and f.rate > 0.0:
                         moved = f.rate * step
                         f.transferred += moved
                         if not f.background:
                             f.remaining -= moved
                 self.now += step
+            activated = self._activate_pending()
             done = [
                 f for f in self.flows
-                if not f.background and f.remaining <= self._done_eps(f)
+                if f.active_at is None
+                and not f.background
+                and f.remaining <= self._done_eps(f)
             ]
             if done:
                 for f in done:
@@ -215,27 +289,36 @@ class FlowSim:
                 for f in done:
                     if f.on_complete:
                         f.on_complete(f, self.now)
-            if step <= 0.0 and not done:
+                for f in done:
+                    self._emit(ev.FLOW_COMPLETED, flow=f)
+            if step <= 0.0 and not done and not activated:
                 break  # nothing can progress (all flows stalled at rate 0)
         if now > self.now:
             self.now = now
+        self._activate_pending()
         return completed
 
     def next_event_time(self) -> float | None:
-        """When the earliest in-flight flow finishes under current rates —
-        where a discrete-event driver should schedule its next net poll."""
+        """When the earliest in-flight flow finishes under current rates (or
+        a propagating flow activates and rates change) — where a discrete-
+        event driver should schedule its next net poll."""
         ts = [
             self.now + f.remaining / f.rate
             for f in self.flows
-            if not f.background and f.rate > 0.0
+            if f.active_at is None and not f.background and f.rate > 0.0
         ]
+        ts.extend(f.active_at for f in self.flows if f.active_at is not None)
         return min(ts) if ts else None
 
     # -- rate allocation -----------------------------------------------------
     def _recompute(self) -> None:
-        rates = maxmin_rates([f.path for f in self.flows])
-        for f, r in zip(self.flows, rates):
+        active = [f for f in self.flows if f.active_at is None]
+        rates = maxmin_rates([f.path for f in active])
+        for f, r in zip(active, rates):
             f.rate = r
+        for f in self.flows:
+            if f.active_at is not None:
+                f.rate = 0.0  # still propagating: contends with nobody
 
     # -- scenario knobs ------------------------------------------------------
     def degrade_link(self, key: LinkKey, multiplier: float, now: float | None = None) -> None:
@@ -245,16 +328,21 @@ class FlowSim:
             self.advance_to(now)
         self.net.link(key).degrade = multiplier
         self._recompute()
+        self._emit(ev.LINK_DEGRADED, link_key=key)
 
     def fail_link(self, key: LinkKey, now: float | None = None) -> list[Flow]:
         """Fail one directed link.  Flows crossing it re-route onto a
         surviving spine plane when possible; otherwise they abort (their
-        ``on_abort`` fires — the re-planning hook).  Returns aborted flows."""
+        ``on_abort`` fires — the re-planning hook).  Returns aborted flows.
+        Subscribers see LINK_FAILED *after* the aborts have settled, so a
+        control plane reacting to it observes the post-failure network."""
         if now is not None:
             self.advance_to(now)
         link = self.net.link(key)
         link.failed = True
-        return self._evict_failed()
+        aborted = self._evict_failed()
+        self._emit(ev.LINK_FAILED, link_key=key)
+        return aborted
 
     def fail_device(self, dev: int, now: float | None = None) -> list[Flow]:
         """Fail a whole device: its NIC links go down AND any flow with the
@@ -264,7 +352,9 @@ class FlowSim:
             self.advance_to(now)
         self.net.link((DEV_OUT, dev)).failed = True
         self.net.link((DEV_IN, dev)).failed = True
-        return self._evict_failed(dead_devs={dev})
+        aborted = self._evict_failed(dead_devs={dev})
+        self._emit(ev.DEVICE_FAILED, device=dev)
+        return aborted
 
     def fail_leaf(self, leaf: int, now: float | None = None) -> list[Flow]:
         """Fail a whole leaf switch: every member NIC and every uplink."""
@@ -277,13 +367,16 @@ class FlowSim:
         for p in range(self.net.spine_planes):
             self.net.link((LEAF_UP, leaf, p)).failed = True
             self.net.link((LEAF_DOWN, leaf, p)).failed = True
-        return self._evict_failed()
+        aborted = self._evict_failed()
+        self._emit(ev.LEAF_FAILED, leaf=leaf)
+        return aborted
 
     def recover_link(self, key: LinkKey, now: float | None = None) -> None:
         if now is not None:
             self.advance_to(now)
         self.net.link(key).failed = False
         self._recompute()
+        self._emit(ev.LINK_RECOVERED, link_key=key)
 
     def recover_device(self, dev: int, now: float | None = None) -> None:
         if now is not None:
@@ -291,6 +384,7 @@ class FlowSim:
         self.net.link((DEV_OUT, dev)).failed = False
         self.net.link((DEV_IN, dev)).failed = False
         self._recompute()
+        self._emit(ev.DEVICE_RECOVERED, device=dev)
 
     def _evict_failed(self, dead_devs: set[int] = frozenset()) -> list[Flow]:
         aborted: list[Flow] = []
@@ -316,7 +410,10 @@ class FlowSim:
         """Seconds a hypothetical src->dst transfer of ``nbytes`` would take
         under the CURRENT traffic (existing flows run to completion, no new
         arrivals).  Pure — the live state is untouched.  ``inf`` when no
-        live path exists.  Used by FleetScheduler placement affinity."""
+        live path exists.  Includes the latency model: the hypothetical
+        flow (and any still-propagating live flow) only starts claiming
+        bandwidth once its first-byte setup has elapsed.  Used by
+        FleetScheduler placement affinity."""
         path = self._route(src, dst)
         if path is None:
             return math.inf
@@ -325,16 +422,28 @@ class FlowSim:
         paths = [f.path for f in self.flows]
         rem = [f.remaining for f in self.flows]
         fin = [not f.background for f in self.flows]
+        # time (from now) at which each flow starts claiming bandwidth
+        act = [
+            max(0.0, f.active_at - self.now) if f.active_at is not None else 0.0
+            for f in self.flows
+        ]
         paths.append(list(path))
         rem.append(float(nbytes))
         fin.append(True)
+        act.append(self.net.path_latency(path))
         target = len(paths) - 1
         t = 0.0
         for _ in range(max_events):
-            rates = maxmin_rates(paths)
+            live = [i for i in range(len(paths)) if act[i] <= t + _EPS]
+            rates_live = maxmin_rates([paths[i] for i in live])
+            rates = [0.0] * len(paths)
+            for i, r in zip(live, rates_live):
+                rates[i] = r
             dt = math.inf
             for i in range(len(paths)):
-                if fin[i] and rates[i] > 0.0:
+                if act[i] > t + _EPS:
+                    dt = min(dt, act[i] - t)  # activation boundary
+                elif fin[i] and rates[i] > 0.0:
                     dt = min(dt, rem[i] / rates[i])
             if not math.isfinite(dt):
                 return math.inf  # stalled (zero-capacity link on the path)
@@ -348,7 +457,7 @@ class FlowSim:
             if target in done_idx:
                 return t
             for i in reversed(done_idx):
-                del paths[i], rem[i], fin[i]
+                del paths[i], rem[i], fin[i], act[i]
                 if i < target:
                     target -= 1
         return math.inf  # pragma: no cover - event budget exhausted

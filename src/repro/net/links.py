@@ -21,11 +21,24 @@ derived from :class:`repro.core.topology.Topology`:
 Scenario knobs live on the :class:`Link`: ``degrade`` multiplies capacity
 (a flapping or rate-limited link) and ``failed`` zeroes it (the flow
 simulator re-routes or aborts flows crossing a failed link).
+
+Latency model: every link carries a propagation delay (``prop_delay_s``)
+and every switching element between two consecutive links on a path adds
+``switch_latency_s`` — so a cross-leaf path (NIC egress → leaf uplink →
+leaf downlink → NIC ingress) pays 4 propagation terms + 3 switching terms,
+an intra-leaf path pays 2 + 1, and the scale-up fabric pays only its own
+propagation.  :meth:`NetworkModel.path_latency` composes them; the flow
+simulator charges the total as first-byte setup time before a flow starts
+claiming its max-min bandwidth share, so small transfers (per-request KV
+pages, per-layer multicast messages) become latency-dominated while bulk
+transfers stay bandwidth-dominated.  Both terms default to zero, which
+reproduces the pure bandwidth-sharing model exactly.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 from repro.core.topology import NVLINK_GBPS, Topology, gbps_to_bytes_per_s
 
@@ -46,6 +59,7 @@ class Link:
     capacity: float  # bytes/s nominal
     degrade: float = 1.0  # bandwidth multiplier (degraded-link scenario)
     failed: bool = False
+    prop_delay_s: float = 0.0  # per-hop propagation delay (latency model)
 
     @property
     def rate_cap(self) -> float:
@@ -68,11 +82,17 @@ class NetworkModel:
         spine_oversub: float = 1.0,
         spine_planes: int = 1,
         scaleup_gbps: float = NVLINK_GBPS,
+        link_latency_s: float = 0.0,
+        switch_latency_s: float = 0.0,
     ):
         if spine_planes < 1:
             raise ValueError("spine_planes must be >= 1")
+        if link_latency_s < 0.0 or switch_latency_s < 0.0:
+            raise ValueError("latency terms must be >= 0")
         self.topo = topo
         self.spine_planes = spine_planes
+        self.link_latency_s = link_latency_s
+        self.switch_latency_s = switch_latency_s
         self.links: dict[LinkKey, Link] = {}
         leaf_bw: dict[int, float] = {}
         for d in topo.devices:
@@ -93,10 +113,21 @@ class NetworkModel:
             self._add((SCALEUP, su), gbps_to_bytes_per_s(scaleup_gbps) * n)
 
     def _add(self, key: LinkKey, capacity: float) -> None:
-        self.links[key] = Link(key, capacity)
+        self.links[key] = Link(key, capacity, prop_delay_s=self.link_latency_s)
 
     def link(self, key: LinkKey) -> Link:
         return self.links[key]
+
+    def path_latency(self, path: Sequence[Link]) -> float:
+        """First-byte latency of a path: per-hop propagation plus one
+        switching delay per element between consecutive links.  Empty paths
+        (same-device transfers) have zero latency."""
+        if not path:
+            return 0.0
+        return (
+            sum(l.prop_delay_s for l in path)
+            + self.switch_latency_s * (len(path) - 1)
+        )
 
     # -- routing -------------------------------------------------------------
     def path(self, src: int, dst: int, *, plane: int = 0) -> list[Link]:

@@ -132,8 +132,29 @@ class MulticastExecution:
             if self.on_done:
                 self.on_done(self, sim.now)
             return self
+        self._charge_chain_latency(sim)
         sim.start_many(self.flows)
         return self
+
+    def _charge_chain_latency(self, sim: FlowSim) -> None:
+        """Under the latency model, hop ``k`` of a pipelined forwarding
+        chain cannot deliver its first byte before the store-and-forward
+        latencies of hops ``0..k-1`` have elapsed — charge each hop the
+        cumulative latency of its upstream edges as ``extra_latency_s``
+        (parallel sharded hops of one edge pay the slowest of the edge).
+        Zero-latency networks leave every flow untouched."""
+        by_chain: dict[int, list[_EdgeState]] = {}
+        for st in self.edges:
+            by_chain.setdefault(st.chain_idx, []).append(st)
+        for states in by_chain.values():
+            prefix = 0.0
+            for st in sorted(states, key=lambda s: s.edge_idx):
+                edge_lat = 0.0
+                for f in st.flows:
+                    f.extra_latency_s = prefix
+                    if f.kind is FlowKind.MULTICAST_HOP:
+                        edge_lat = max(edge_lat, sim.route_latency(f.src, f.dst))
+                prefix += edge_lat
 
     def cancel(self, sim: FlowSim | None = None, now: float | None = None) -> None:
         """Withdraw all outstanding hops without firing abort callbacks

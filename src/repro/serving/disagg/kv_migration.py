@@ -63,6 +63,17 @@ class MigrationPayload:
     # so the resume-side gap check can detect the live request being decoded,
     # truncated, or replayed while its KV pages were in flight
     tokens_at_freeze: list[int] = dataclasses.field(default_factory=list)
+    # realized transfer timestamps (latency + contention included) — small
+    # KV payloads are latency-dominated under the per-hop latency model,
+    # and this is where that shows up per request
+    sent_at: float | None = None
+    landed_at: float | None = None
+
+    @property
+    def transfer_seconds(self) -> float | None:
+        if self.sent_at is None or self.landed_at is None:
+            return None
+        return self.landed_at - self.sent_at
 
 
 def make_payload(
@@ -111,6 +122,7 @@ class KVMigrationChannel:
         self.net = net
         self._arrived: list[MigrationPayload] = []
         self._failed: list[MigrationPayload] = []
+        self.transfer_log: list[float] = []  # realized seconds per landing
 
     @property
     def flows(self) -> list[Flow]:
@@ -122,6 +134,9 @@ class KVMigrationChannel:
 
     # -- transfer lifecycle -------------------------------------------------
     def start(self, payload: MigrationPayload, now: float) -> None:
+        self.net.advance_to(now)
+        payload.sent_at = self.net.now  # before start: an instant (same-
+        payload.landed_at = None  # device) landing fires _landed inside it
         self.net.start(
             Flow(
                 FlowKind.KV_MIGRATION,
@@ -132,11 +147,12 @@ class KVMigrationChannel:
                 on_complete=self._landed,
                 on_abort=self._aborted,
                 tag=f"kv:{payload.rid}",
-            ),
-            now,
+            )
         )
 
     def _landed(self, flow: Flow, t: float) -> None:
+        flow.payload.landed_at = t
+        self.transfer_log.append(t - flow.payload.sent_at)
         self._arrived.append(flow.payload)
 
     def _aborted(self, flow: Flow, t: float) -> None:

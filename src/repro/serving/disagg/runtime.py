@@ -61,6 +61,8 @@ class RuntimeStats:
     aborted_param_streams: int = 0  # live-scales killed by a link/NIC failure
     remigrations: int = 0  # KV migrations re-targeted after a failure
     re_prefills: int = 0  # requests re-prefilled after their source died
+    cancelled_scales: int = 0  # doomed live-scales torn down by the fleet's
+    #   failure subscription (immediate, instead of the drain/retire path)
 
 
 class ClusterRuntime:
@@ -203,6 +205,51 @@ class ClusterRuntime:
         self.allowed_devices.difference_update(freed)
         return freed
 
+    def revoke_devices(self, ids: Iterable[int]) -> list[int]:
+        """Strip granted devices (dead NICs the fleet's failure subscription
+        found) from the allowed set — a doomed grant must not be consumed.
+        Returns the devices actually revoked."""
+        if self.allowed_devices is None:
+            return []
+        revoked = [i for i in ids if i in self.allowed_devices]
+        self.allowed_devices.difference_update(revoked)
+        return revoked
+
+    def fail_devices(self, dead: set[int], now: float) -> list[str]:
+        """Fleet failure subscription entry: tear down live-scales doomed by
+        ``dead`` devices RIGHT NOW — the engine is removed from the pool and
+        its device reclaimed immediately, instead of waiting for the
+        drain→retire path a tick later — and report the phases that lost an
+        engine so the caller can re-grant elsewhere.  Idempotent: an engine
+        already torn down is gone from the pool, so a second failure event
+        for the same devices finds nothing."""
+        lost: list[str] = []
+        for pe in list(self.pool.all()):
+            if pe.device_id not in dead or pe.session is None:
+                continue  # only in-flight live-scales are "doomed grants"
+            exec_ = self._live_execs.pop(pe.device_id, None)
+            if exec_ is not None:
+                exec_.cancel(self.net)
+            self.pool.engines[pe.phase].remove(pe)
+            dev = self.topo.device(pe.device_id)
+            dev.role = topo_mod.Role.FREE
+            dev.model = None
+            self.param_pool.reclaim(self.cfg.name, [pe.device_id])
+            self.stats.cancelled_scales += 1
+            lost.append(pe.phase)
+            self._log(
+                f"[fleet] cancelled doomed {pe.phase} live-scale on dead "
+                f"dev {pe.device_id}"
+            )
+        return lost
+
+    def restart_scale(
+        self, phase: str, now: float, *, target: int | None = None
+    ) -> P.PooledEngine | None:
+        """Re-provision one engine after a failure — the fleet's re-grant
+        path (``target`` pins the affinity-ranked device it just granted)."""
+        return self._live_scale(phase, now, target=target)
+
     def drain_all(self) -> int:
         """Scale-to-zero entry: every engine finishes its in-flight work,
         takes nothing new, and frees its device on retirement.  The shared
@@ -223,7 +270,7 @@ class ClusterRuntime:
         engines started."""
         self.frozen = False
         gpu_srcs, _ = self.param_pool.sources(self.cfg.name)
-        from_host = not gpu_srcs
+        from_host = not any(self.net.device_ok(s) for s in gpu_srcs)
         n = 0
         for phase in (P.PREFILL, P.DECODE):
             if self._live_scale(phase, now) is not None:
@@ -281,18 +328,26 @@ class ClusterRuntime:
         return len(self._sreqs) - len(self.completed)
 
     # -- scaling actions ----------------------------------------------------
-    def _live_scale(self, phase: str, now: float) -> P.PooledEngine | None:
+    def _live_scale(
+        self, phase: str, now: float, *, target: int | None = None
+    ) -> P.PooledEngine | None:
         """Provision a spare device with a live-scaling engine: the multicast
         plan's hops become real flows on the shared FlowSim, and the engine
         ramps ``loaded_layers`` from the *realized* bytes delivered — so KV
-        migrations, co-tenant traffic and degraded links all slow the ramp."""
+        migrations, co-tenant traffic and degraded links all slow the ramp.
+        ``target`` pins a specific spare (the fleet's affinity-ranked
+        failure re-grant); otherwise the first spare is taken."""
         spares = self._spare_ids()
         if not spares:
             return None
-        target = spares[0]
+        target = target if target in spares else spares[0]
         gpu_srcs, host = self.param_pool.sources(self.cfg.name)
+        # a copy behind a failed NIC cannot source a multicast: never plan
+        # from it (the plan's flows would abort on arrival)
+        gpu_srcs = [s for s in gpu_srcs if self.net.device_ok(s)]
         host_devs = [
-            d.id for d in self.topo.devices if d.is_host and d.host == host
+            d.id for d in self.topo.devices
+            if d.is_host and d.host == host and self.net.device_ok(d.id)
         ]
         srcs = gpu_srcs or host_devs
         if not srcs:

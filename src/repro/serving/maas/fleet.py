@@ -32,7 +32,7 @@ import math
 
 from repro.core import topology as topo_mod
 from repro.core.parameter_pool import ParameterPool
-from repro.net import FlowSim
+from repro.net import FAILURE_KINDS, FlowSim, NetEvent
 from repro.serving.disagg import pools as P
 from repro.serving.disagg.runtime import ClusterRuntime
 from repro.serving.maas import tenant as T
@@ -68,6 +68,8 @@ class FleetStats:
     grants: int = 0  # devices handed out by arbitration
     rejections: int = 0  # requests shed by admission control
     gpu_seconds: float = 0.0  # fleet-wide device-seconds occupied by engines
+    grant_cancellations: int = 0  # granted devices revoked on NIC/leaf death
+    failure_regrants: int = 0  # engines re-granted by the failure subscription
 
 
 class FleetScheduler:
@@ -93,6 +95,11 @@ class FleetScheduler:
         self.stats = FleetStats()
         self.verbose = verbose
         self._last_tick: float | None = None
+        # first-class failure subscription: the scheduler learns of a
+        # leaf/device death the instant the FlowSim processes it — not one
+        # tick later via the victim runtime's drain path — and immediately
+        # cancels doomed grants and re-grants on surviving leaves
+        self.net.subscribe(self._on_net_event)
 
     def _log(self, msg: str) -> None:
         if self.verbose:
@@ -270,6 +277,49 @@ class FleetScheduler:
                 self._log(f"[fleet] {t.name}: at zero (host copy only)")
         return finished
 
+    # -- failure subscription ------------------------------------------------
+    def _on_net_event(self, event: NetEvent) -> None:
+        if event.kind in FAILURE_KINDS:
+            self._handle_failure(event.t)
+
+    def _handle_failure(self, now: float) -> None:
+        """React to a link/device/leaf failure the moment the FlowSim emits
+        it: revoke grants on dead devices, tear down live-scales that were
+        loading onto them (the runtime's abort callback already marked them;
+        we retire them NOW instead of waiting for its drain path), re-rank
+        placement affinity against the post-failure network, and re-grant +
+        restart each lost engine on a surviving leaf — all within the same
+        event, so a cold start survives a mid-flight leaf death without
+        losing a tick."""
+        dead = {
+            d.id
+            for d in self.topo.devices
+            if not d.is_host and not self.net.device_ok(d.id)
+        }
+        if not dead:
+            return
+        for t in self.tenants.values():
+            rt = t.runtime
+            revoked = rt.revoke_devices(dead)
+            self.stats.grant_cancellations += len(revoked)
+            lost = rt.fail_devices(dead, now)
+            if not lost:
+                continue
+            # affinity is re-ranked from scratch: dead devices are no longer
+            # grantable and estimates route around failed links
+            ranked = self._rank_free_for(t, set(self.free_devices()))
+            for phase in lost:
+                if not ranked:
+                    break  # nothing survives; regular arbitration retries
+                dev = ranked.pop(0)
+                rt.acquire_devices([dev])
+                if rt.restart_scale(phase, now, target=dev) is not None:
+                    self.stats.failure_regrants += 1
+                    self._log(
+                        f"[fleet] {t.name}: failure re-grant -> {phase} "
+                        f"live-scale on dev {dev}"
+                    )
+
     # -- internals -----------------------------------------------------------
     def _rank_free_for(self, t: Tenant, free: set[int]) -> list[int]:
         """Placement-affinity order for granting ``free`` devices to ``t``:
@@ -279,8 +329,11 @@ class FleetScheduler:
         the nearest source under whatever traffic is currently live."""
         cands = sorted(free)
         gpu_srcs, host = self.param_pool.sources(t.name)
+        gpu_srcs = [s for s in gpu_srcs if self.net.device_ok(s)]
         src_devs = gpu_srcs or [
-            d.id for d in self.topo.devices if d.is_host and d.host == host
+            d.id
+            for d in self.topo.devices
+            if d.is_host and d.host == host and self.net.device_ok(d.id)
         ]
         if not src_devs:
             return cands

@@ -131,6 +131,20 @@ def multi_model_mix(
     return merged
 
 
+def request_kv_bytes(prompt_tokens: int, kv_bytes_per_token: int) -> int:
+    """KV-cache volume one request's prefill produces — the bytes its
+    prefill→decode stream actually moves over the network (the simulator's
+    per-request serving flows are sized with this, replacing the old
+    persistent background streams)."""
+    return max(1, int(prompt_tokens)) * int(kv_bytes_per_token)
+
+
+def kv_volumes(trace: list[tuple[float, int, int]],
+               kv_bytes_per_token: int) -> list[int]:
+    """Per-request KV stream sizes for a whole trace, in arrival order."""
+    return [request_kv_bytes(p, kv_bytes_per_token) for _, p, _ in trace]
+
+
 def scale_to_capacity(trace: list[tuple[float, int, int]],
                       target_rate: float) -> list[tuple[float, int, int]]:
     """TraceUpscaler-style: rescale arrival times so the mean request rate

@@ -1,0 +1,85 @@
+"""Golden-trace determinism harness for the unified network data plane.
+
+A seeded end-to-end simulator run serializes its full flow-event log (via
+the FlowSim subscription API) and diffs it against a checked-in golden
+file, bit-for-bit on event times (``repr`` floats round-trip exactly):
+
+  * ``flow_events_legacy.txt`` — zero latency terms + per-request KV flows
+    DISABLED, i.e. the exact PR-3 FlowSim configuration.  Any drift here
+    means the latency/per-request refactor (or a future change) perturbed
+    the pure bandwidth-sharing model it promised to reproduce exactly.
+  * ``flow_events_realistic.txt`` — latency terms on + request-granular
+    serving flows, pinning the behaviour of the new model itself.
+
+Regenerate intentionally with ``REGEN_GOLDEN=1 pytest tests/test_golden_trace.py``
+after a change that is SUPPOSED to move timings, and commit the diff.
+"""
+
+import os
+import pathlib
+
+from repro.core import simulator as sim
+from repro.net import FlowEventLog
+from repro.serving import traces
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+PROF = sim.profile_for("8b")
+
+
+def _seeded_run(**kw):
+    log = FlowEventLog()
+    s = sim.Simulator(sim.BLITZ, PROF, seed=0, **kw)
+    s.flowsim.subscribe(log)
+    trace = traces.burstgpt(duration=40.0, base_rate=5.0, seed=11)
+    result = s.run(trace)
+    return log, result
+
+
+def _assert_matches_golden(name: str, lines: list[str]) -> None:
+    path = GOLDEN_DIR / name
+    if os.environ.get("REGEN_GOLDEN"):
+        GOLDEN_DIR.mkdir(exist_ok=True)
+        path.write_text("\n".join(lines) + "\n")
+    want = path.read_text().splitlines()
+    for i, (got, exp) in enumerate(zip(lines, want)):
+        assert got == exp, (
+            f"{name}: first divergence at event {i}:\n"
+            f"  got:  {got}\n  want: {exp}"
+        )
+    assert len(lines) == len(want), (
+        f"{name}: event count changed: got {len(lines)}, want {len(want)}"
+    )
+
+
+def test_flow_event_log_matches_golden_legacy():
+    """Zero-latency + background serving streams = the PR-3 configuration:
+    every flow event of the seeded run must reproduce exactly."""
+    log, result = _seeded_run(per_request_kv=False)
+    assert result.kv_stream_bytes == 0.0  # legacy mode moves no per-req KV
+    assert log.count("flow_started") > 0 and log.count("flow_completed") > 0
+    _assert_matches_golden("flow_events_legacy.txt", log.lines())
+
+
+def test_flow_event_log_matches_golden_realistic():
+    """Latency terms + per-request KV flows enabled: the new model's own
+    regression pin (request-granular serving traffic is on the wire)."""
+    log, result = _seeded_run(link_latency_s=2e-5, switch_latency_s=5e-6)
+    assert result.kv_stream_bytes > 0.0
+    assert any("reqkv:" in line for line in log.lines())
+    _assert_matches_golden("flow_events_realistic.txt", log.lines())
+
+
+def test_seeded_run_is_deterministic_across_invocations():
+    """Two fresh runs of the same seeded configuration produce the same
+    event log — the property the golden files depend on."""
+    a, _ = _seeded_run(link_latency_s=2e-5, switch_latency_s=5e-6)
+    b, _ = _seeded_run(link_latency_s=2e-5, switch_latency_s=5e-6)
+    assert a.lines() == b.lines()
+
+
+def test_realistic_log_differs_from_legacy():
+    """The latency + per-request configuration must actually change the
+    event stream (otherwise the 'realistic' golden pins nothing new)."""
+    legacy, _ = _seeded_run(per_request_kv=False)
+    real, _ = _seeded_run(link_latency_s=2e-5, switch_latency_s=5e-6)
+    assert legacy.lines() != real.lines()

@@ -1,5 +1,6 @@
 """MaaS control plane: fleet arbitration, scale-to-zero, cold start,
-idle-model preemption — N models sharing one topology + one O(1) pool."""
+idle-model preemption, and the FlowSim failure subscription — N models
+sharing one topology + one O(1) pool."""
 
 import jax
 import numpy as np
@@ -10,6 +11,7 @@ from repro.core import topology as tp
 from repro.core.autoscaler import PolicyConfig
 from repro.models import transformer as TF
 from repro.serving import traces
+from repro.serving.disagg import pools as P
 from repro.serving.engine import InstanceEngine, ServeRequest
 from repro.serving.maas import (
     ACTIVE,
@@ -296,6 +298,112 @@ def test_placement_affinity_prefers_leaves_with_gpu_copies():
     fleet.net.degrade_link(("dev_in", 2), 0.1)
     ranked = fleet._rank_free_for(t, set(fleet.free_devices()))
     assert ranked == [1, 3, 2]
+
+
+def _fleet_with_inflight_scale(seed=1):
+    """3 leaves x 2 devices; the model is seated on leaf 0, so a burst makes
+    arbitration grant leaf-1/2 devices and live-scale onto them — returns
+    the fleet mid-flight with at least one LOADING engine off leaf 0."""
+    topo = tp.add_host_sources(tp.make_cluster(3, 2, hosts_per_leaf=1, bw_gbps=100.0))
+    fleet = FleetScheduler(topo, policy=FleetPolicy(idle_to_zero_s=1e9))
+    fleet.add_model(
+        CFG_A, PARAMS, n_prefill=1, n_decode=1, n_slots=2, max_seq=48,
+        model_bytes=int(2e9),  # ~0.16 s on 100 Gbps: many ticks in flight
+        prefill_capacity_tps=50.0, decode_capacity_tps=20.0,
+        policy=PolicyConfig(max_instances=3, kv_upper=0.5),
+    )
+    rt = fleet.tenants["maas-a"].runtime
+    rng = np.random.default_rng(seed)
+    now = 0.0
+    for _ in range(12):
+        fleet.submit("maas-a", rng.integers(0, CFG.vocab_size, size=16).astype(np.int32), 6, now)
+    loading = []
+    for _ in range(400):
+        now += 0.02
+        fleet.tick(now)
+        loading = [pe for pe in rt.pool.all() if pe.state == P.LOADING]
+        if loading:
+            break
+    assert loading, "no live-scale ever started"
+    assert all(topo.leaf_of(pe.device_id) != 0 for pe in loading)
+    return topo, fleet, rt, loading, now
+
+
+def test_leaf_failure_mid_cold_start_regrants_within_one_tick():
+    """Fail a leaf while parameters are streaming onto it: the scheduler's
+    failure subscription — not the victim runtime's drain path — must
+    cancel the doomed grant, re-rank affinity against the post-failure
+    network, and re-grant on a surviving leaf IMMEDIATELY (inside the
+    fail_leaf call, before any further tick)."""
+    topo, fleet, rt, loading, now = _fleet_with_inflight_scale()
+    n_doomed = len(loading)
+    doomed_devs = {pe.device_id for pe in loading}
+    dead_leaf = topo.leaf_of(loading[0].device_id)
+
+    fleet.net.fail_leaf(dead_leaf, now)
+
+    # grant cancelled: doomed engines are gone and dead devices revoked
+    assert rt.stats.cancelled_scales == n_doomed
+    assert not doomed_devs & {pe.device_id for pe in rt.pool.all()}
+    assert not doomed_devs & (rt.allowed_devices or set())
+    # re-granted elsewhere, within the same event — zero ticks elapsed
+    regrants = [pe for pe in rt.pool.all() if pe.state == P.LOADING]
+    assert len(regrants) == n_doomed == fleet.stats.failure_regrants
+    assert all(topo.leaf_of(pe.device_id) != dead_leaf for pe in regrants)
+    # affinity re-ranked: the replacement multicast sources are all alive
+    assert all(fleet.net.device_ok(pe.device_id) for pe in regrants)
+
+    # the fleet still drains every request to completion, token-faithfully
+    for _ in range(6000):
+        if fleet.n_outstanding == 0:
+            break
+        now += 0.02
+        fleet.tick(now)
+    assert fleet.n_outstanding == 0
+    _, gapped = rt.router.handoff_report()
+    assert gapped == 0
+
+
+def test_failure_not_double_handled_by_drain_and_subscription():
+    """The runtime's abort→drain path and the scheduler's subscription see
+    the SAME failure: exactly one abort, one cancellation and one re-grant
+    per doomed engine — no duplicate re-plans, no drain-path retirement of
+    an engine the subscription already tore down, and a repeated failure
+    event for the same devices is a no-op."""
+    topo, fleet, rt, loading, now = _fleet_with_inflight_scale(seed=2)
+    n_doomed = len(loading)
+    doomed_devs = {pe.device_id for pe in loading}
+    dead_leaf = topo.leaf_of(loading[0].device_id)
+    scales_before = rt.stats.live_scaled_prefill + rt.stats.direct_decode_scales
+    retired_before = rt.stats.retired
+
+    fleet.net.fail_leaf(dead_leaf, now)
+
+    # each doomed engine: ONE abort (runtime callback), ONE cancellation
+    # (subscription), ONE replacement live-scale (subscription re-grant)
+    assert rt.stats.aborted_param_streams == n_doomed
+    assert rt.stats.cancelled_scales == n_doomed
+    assert fleet.stats.failure_regrants == n_doomed
+    assert (rt.stats.live_scaled_prefill + rt.stats.direct_decode_scales
+            == scales_before + n_doomed)
+    # not ALSO retired via the drain path — the subscription removed them
+    assert rt.stats.retired == retired_before
+
+    # a couple of ticks later the drain path must not rediscover the dead
+    # engines (they are no longer in the pool) nor re-plan a second time
+    for _ in range(3):
+        now += 0.02
+        fleet.tick(now)
+    assert rt.stats.cancelled_scales == n_doomed
+    assert fleet.stats.failure_regrants == n_doomed
+    assert not doomed_devs & {pe.device_id for pe in rt.pool.all()}
+
+    # replaying the failure for an already-dead device changes nothing
+    before = (fleet.stats.failure_regrants, rt.stats.cancelled_scales,
+              rt.stats.aborted_param_streams)
+    fleet.net.fail_device(next(iter(doomed_devs)), now)
+    assert (fleet.stats.failure_regrants, rt.stats.cancelled_scales,
+            rt.stats.aborted_param_streams) == before
 
 
 def test_fleet_rejects_overcommitted_seating():

@@ -1,5 +1,6 @@
 """Flow-level network simulator: max-min invariants, incast regression,
-scenario knobs (degrade / fail / reroute), and multicast execution timing."""
+scenario knobs (degrade / fail / reroute), multicast execution timing, the
+per-hop latency model, and the event-subscription API."""
 
 import math
 
@@ -10,8 +11,14 @@ from repro.core import topology as tp
 from repro.net import (
     DEV_IN,
     DEV_OUT,
+    DEVICE_FAILED,
+    FLOW_ABORTED,
+    FLOW_COMPLETED,
+    FLOW_STARTED,
     LEAF_UP,
+    LINK_FAILED,
     Flow,
+    FlowEventLog,
     FlowKind,
     FlowSim,
     MulticastExecution,
@@ -39,6 +46,11 @@ def _check_maxmin_invariants(sim: FlowSim):
         assert total <= cap * (1 + 1e-9) + 1e-6, (key, total, cap)
     for f in sim.flows:
         if not f.path or not math.isfinite(f.rate):
+            continue
+        if f.active_at is not None:
+            # still propagating under the latency model: claims nothing by
+            # design, so it has no bottleneck yet
+            assert f.rate == 0.0
             continue
         # 2. bottleneck: some link on the path is saturated AND no flow on
         # that link gets more than f (else f's rate could be raised)
@@ -288,6 +300,190 @@ def test_multicast_execution_abort_on_failure():
 
 
 # ---------------------------------------------------------------------------
+# Latency model: per-hop propagation + switching composed with max-min shares
+# ---------------------------------------------------------------------------
+
+
+def test_zero_latency_is_the_pure_bandwidth_model():
+    """Explicit zero latency terms change nothing versus the default."""
+    for kw in ({}, dict(link_latency_s=0.0, switch_latency_s=0.0)):
+        sim = FlowSim(_flat_cluster(4), **kw)
+        f = sim.start(Flow(FlowKind.KV_MIGRATION, 0, 1, GB), 0.0)
+        assert f.active_at is None and f.rate == pytest.approx(GB)
+        sim.advance_to(5.0)
+        assert f.finished_at == pytest.approx(1.0)
+
+
+def test_uncontended_finish_is_latency_plus_transfer_exactly():
+    """First-byte setup: an uncontended flow takes latency + size/BW."""
+    sim = FlowSim(_flat_cluster(4), link_latency_s=0.01, switch_latency_s=0.005)
+    f = sim.start(Flow(FlowKind.KV_MIGRATION, 0, 1, GB), 0.0)  # intra-leaf
+    # while propagating the flow claims no bandwidth at all
+    assert f.rate == 0.0 and f.active_at == pytest.approx(0.025)
+    g = sim.start(Flow(FlowKind.KV_MIGRATION, 2, 3, GB), 0.0)
+    sim.advance_to(10.0)
+    # 2 links x 10ms + 1 switch x 5ms = 25ms, then 1 GB at 1 GB/s
+    assert f.finished_at == pytest.approx(1.025)
+    assert g.finished_at == pytest.approx(1.025)
+
+
+def test_finish_time_monotone_in_hop_count():
+    """A cross-leaf path (4 links, 3 switches) pays strictly more latency
+    than an intra-leaf path (2 links, 1 switch) for the same bytes."""
+    topo = _flat_cluster(4, hosts_per_leaf=2)
+    times = {}
+    for name, (src, dst) in (("intra", (0, 1)), ("cross", (0, 3))):
+        sim = FlowSim(topo, link_latency_s=0.01, switch_latency_s=0.005)
+        f = sim.start(Flow(FlowKind.COLD_START, src, dst, GB), 0.0)
+        sim.advance_to(10.0)
+        times[name] = f.finished_at
+    assert times["intra"] == pytest.approx(1.0 + 2 * 0.01 + 1 * 0.005)
+    assert times["cross"] == pytest.approx(1.0 + 4 * 0.01 + 3 * 0.005)
+    assert times["cross"] > times["intra"]
+
+
+def test_finish_time_monotone_in_propagation_delay_and_converges_to_zero():
+    """Finish times grow strictly with the propagation term and converge to
+    the pure bandwidth model as latency -> 0."""
+    finishes = []
+    for lat in (0.0, 1e-6, 1e-4, 1e-2, 1.0):
+        sim = FlowSim(_flat_cluster(4), link_latency_s=lat)
+        f = sim.start(Flow(FlowKind.KV_MIGRATION, 0, 1, GB), 0.0)
+        sim.advance_to(100.0)
+        finishes.append(f.finished_at)
+        assert f.finished_at == pytest.approx(1.0 + 2 * lat)
+    assert finishes == sorted(finishes)
+    assert all(a < b for a, b in zip(finishes, finishes[1:]))
+    assert finishes[1] - finishes[0] < 1e-5  # lat -> 0 converges
+
+
+def test_maxmin_conservation_holds_with_latency_terms():
+    """Once flows activate they share under the same max-min invariants;
+    still-propagating flows claim nothing."""
+    sim = FlowSim(_flat_cluster(8, hosts_per_leaf=8),
+                  link_latency_s=0.05, switch_latency_s=0.01)
+    flows = [
+        sim.start(Flow(FlowKind.KV_MIGRATION, src, 7, GB), 0.0)
+        for src in range(3)
+    ]
+    late = sim.start(Flow(FlowKind.KV_MIGRATION, 3, 7, GB), 0.2)
+    sim.advance_to(0.21)  # first three active, the late one propagating
+    assert late.rate == 0.0 and late.active_at is not None
+    for f in flows:
+        assert f.rate == pytest.approx(GB / 3)
+    _check_maxmin_invariants(sim)
+    sim.advance_to(0.5)  # all four active now
+    assert late.active_at is None
+    for f in sim.flows:
+        assert f.rate == pytest.approx(GB / 4)
+    _check_maxmin_invariants(sim)
+    sim.advance_to(100.0)
+    assert all(f.done for f in flows) and late.done
+
+
+def test_estimate_includes_latency_and_matches_realized():
+    sim = FlowSim(_flat_cluster(4, hosts_per_leaf=2),
+                  link_latency_s=0.01, switch_latency_s=0.005)
+    est = sim.estimate_transfer_time(0, 3, GB)
+    f = sim.start(Flow(FlowKind.COLD_START, 0, 3, GB), 0.0)
+    sim.advance_to(100.0)
+    assert f.finished_at == pytest.approx(est) == pytest.approx(1.055)
+
+
+def test_multicast_chain_pays_cumulative_store_and_forward_latency():
+    """Hop k of a pipelined chain cannot deliver byte 0 before the
+    latencies of hops 0..k-1 elapsed: chain completion grows with depth."""
+    topo, plan, spares = _planned()
+    depth = max(len(c.edges) for c in plan.chains)
+    assert depth >= 2  # the greedy planner builds a real chain here
+    lat = 0.02
+    sim = FlowSim(topo, link_latency_s=lat)
+    ex = MulticastExecution(plan, int(GB))
+    ex.start(sim, 0.0)
+    sim.advance_to(100.0)
+    t_pure = plan.transfer_seconds(int(GB))
+    # at least the full chain's cumulative first-byte latency is added
+    assert ex.done_at >= t_pure + depth * 2 * lat - 1e-9
+    # and a zero-latency run still matches the analytic plan time
+    sim0 = FlowSim(topo)
+    ex0 = MulticastExecution(plan, int(GB))
+    ex0.start(sim0, 0.0)
+    sim0.advance_to(100.0)
+    assert ex0.done_at == pytest.approx(t_pure)
+
+
+# ---------------------------------------------------------------------------
+# Event-subscription API (flow lifecycle + scenario mutations)
+# ---------------------------------------------------------------------------
+
+
+def test_subscription_delivers_flow_lifecycle_events():
+    sim = FlowSim(_flat_cluster(4))
+    log = sim.subscribe(FlowEventLog())
+    f = sim.start(Flow(FlowKind.KV_MIGRATION, 0, 1, GB, tag="x"), 0.0)
+    sim.advance_to(5.0)
+    assert log.count(FLOW_STARTED) == 1
+    assert log.count(FLOW_COMPLETED) == 1
+    done = [e for e in log.events if e.kind == FLOW_COMPLETED]
+    assert done[0].flow is f and done[0].t == pytest.approx(1.0)
+    assert "kv_migration[x]" in done[0].render()
+    sim.unsubscribe(log)
+    sim.start(Flow(FlowKind.KV_MIGRATION, 1, 2, GB), 5.0)
+    sim.advance_to(10.0)
+    assert len(log.events) == 2  # unsubscribed: nothing new delivered
+
+
+def test_failure_events_emitted_after_aborts_settle():
+    """A subscriber reacting to DEVICE_FAILED/LINK_FAILED must observe the
+    post-failure network: the doomed flow's abort arrives FIRST."""
+    sim = FlowSim(_flat_cluster(4))
+    log = sim.subscribe(FlowEventLog())
+    sim.start(Flow(FlowKind.COLD_START, 0, 1, GB), 0.0)
+    sim.fail_device(1, 0.5)
+    kinds = [e.kind for e in log.events]
+    assert kinds.index(FLOW_ABORTED) < kinds.index(DEVICE_FAILED)
+    assert log.count(DEVICE_FAILED) == 1
+    # lifecycle symmetry: even an unroutable flow (dead destination) logs
+    # its start before its abort — starts always pair with ends
+    sim.start(Flow(FlowKind.KV_MIGRATION, 0, 1, GB), 0.5)
+    assert log.count(FLOW_STARTED) == log.count(FLOW_ABORTED) + log.count(
+        FLOW_COMPLETED
+    )
+    up = (DEV_OUT, 2)
+    sim.fail_link(up, 0.6)
+    assert log.count(LINK_FAILED) == 1
+    # subscribers can mutate the sim from inside a failure event
+    sim2 = FlowSim(_flat_cluster(4))
+    started = []
+    def reactor(e):
+        if e.kind == DEVICE_FAILED:
+            started.append(sim2.start(Flow(FlowKind.COLD_START, 0, 2, GB)))
+    sim2.subscribe(reactor)
+    sim2.start(Flow(FlowKind.COLD_START, 0, 1, GB), 0.0)
+    sim2.fail_device(1, 0.25)
+    sim2.advance_to(10.0)
+    (g,) = started
+    assert g.done and g.finished_at == pytest.approx(1.25)
+
+
+def test_flow_eta_and_event_log_rendering():
+    sim = FlowSim(_flat_cluster(4), link_latency_s=0.25)
+    log = sim.subscribe(FlowEventLog())
+    f = sim.start(Flow(FlowKind.KV_MIGRATION, 0, 1, GB), 0.0)
+    assert f.eta(0.0) == math.inf  # propagating: no rate yet
+    sim.advance_to(0.6)
+    assert f.eta(0.6) == pytest.approx(1.5)  # 0.5s latency + 1s transfer
+    s = sim.start(Flow(FlowKind.SERVING, 2, 3, math.inf), 0.6)
+    assert s.eta(0.6) == math.inf  # background streams never finish
+    sim.advance_to(3.0)
+    assert f.eta(10.0) == f.finished_at == pytest.approx(1.5)
+    sim.degrade_link((DEV_IN, 3), 0.5)
+    dump = log.dump()
+    assert dump.endswith("link_degraded link=dev_in:3\n")
+    assert "flow_started serving[-] 2->3 inf" in dump
+
+
+# ---------------------------------------------------------------------------
 # Hypothesis property tests (skipped when hypothesis is absent; the
 # deterministic tests above always run)
 # ---------------------------------------------------------------------------
@@ -301,9 +497,17 @@ except ImportError:  # pragma: no cover - optional dev dependency
     HAVE_HYPOTHESIS = False
 
 if HAVE_HYPOTHESIS:
+    import datetime
 
-    @settings(max_examples=30, deadline=None)
-    @given(
+    # the heavy suites run at full width under --runslow; tier-1 runs the
+    # same properties as *_fast variants with few examples and a small
+    # per-example deadline, so the default wall-clock stays flat
+    FULL = settings(max_examples=30, deadline=None)
+    FAST = settings(
+        max_examples=6, deadline=datetime.timedelta(milliseconds=500)
+    )
+
+    RANDOM_FLOWS_STRATEGY = dict(
         n_devs=st.integers(3, 10),
         hosts_per_leaf=st.integers(1, 3),
         flows=st.lists(
@@ -312,7 +516,8 @@ if HAVE_HYPOTHESIS:
             max_size=12,
         ),
     )
-    def test_maxmin_invariants_hold_for_random_flow_sets(n_devs, hosts_per_leaf, flows):
+
+    def _prop_maxmin_invariants_random_flow_sets(n_devs, hosts_per_leaf, flows):
         sim = FlowSim(_flat_cluster(n_devs, hosts_per_leaf=hosts_per_leaf))
         for src, dst, gb in flows:
             src, dst = src % n_devs, dst % n_devs
@@ -327,8 +532,18 @@ if HAVE_HYPOTHESIS:
         sim.advance_to(1e4)
         assert sim.completed_count == n  # every finite flow eventually lands
 
-    @settings(max_examples=30, deadline=None)
-    @given(
+    @pytest.mark.slow
+    @FULL
+    @given(**RANDOM_FLOWS_STRATEGY)
+    def test_maxmin_invariants_hold_for_random_flow_sets(n_devs, hosts_per_leaf, flows):
+        _prop_maxmin_invariants_random_flow_sets(n_devs, hosts_per_leaf, flows)
+
+    @FAST
+    @given(**RANDOM_FLOWS_STRATEGY)
+    def test_maxmin_invariants_random_flow_sets_fast(n_devs, hosts_per_leaf, flows):
+        _prop_maxmin_invariants_random_flow_sets(n_devs, hosts_per_leaf, flows)
+
+    REMOVAL_STRATEGY = dict(
         n_devs=st.integers(4, 10),
         flows=st.lists(
             st.tuples(st.integers(0, 9), st.integers(0, 9), st.floats(0.05, 4.0)),
@@ -337,7 +552,8 @@ if HAVE_HYPOTHESIS:
         ),
         drop=st.integers(0, 9),
     )
-    def test_removal_keeps_maxmin_invariants(n_devs, flows, drop):
+
+    def _prop_removal_keeps_maxmin_invariants(n_devs, flows, drop):
         """Withdrawing any flow re-fills a valid max-min allocation
         (conservation + per-flow bottleneck saturation), and the victim's
         bottleneck link's remaining capacity weakly grows.
@@ -373,12 +589,23 @@ if HAVE_HYPOTHESIS:
             # of them regains headroom unless other flows absorbed it all
             assert headroom_a >= -1e-6 and headroom_b >= -1e-6
 
-    @settings(max_examples=30, deadline=None)
-    @given(
+    @pytest.mark.slow
+    @FULL
+    @given(**REMOVAL_STRATEGY)
+    def test_removal_keeps_maxmin_invariants(n_devs, flows, drop):
+        _prop_removal_keeps_maxmin_invariants(n_devs, flows, drop)
+
+    @FAST
+    @given(**REMOVAL_STRATEGY)
+    def test_removal_keeps_maxmin_invariants_fast(n_devs, flows, drop):
+        _prop_removal_keeps_maxmin_invariants(n_devs, flows, drop)
+
+    FANIN_STRATEGY = dict(
         sizes=st.lists(st.floats(0.05, 4.0), min_size=2, max_size=8),
         drop=st.integers(0, 7),
     )
-    def test_fanin_finish_times_monotone_under_removal(sizes, drop):
+
+    def _prop_fanin_finish_times_monotone_under_removal(sizes, drop):
         """Single shared bottleneck (the incast fan-in): removing any one
         competing flow never delays any survivor's finish time."""
         n = len(sizes)
@@ -401,12 +628,20 @@ if HAVE_HYPOTHESIS:
                 continue
             assert fb.finished_at <= fa.finished_at + 1e-6
 
-    @settings(max_examples=25, deadline=None)
-    @given(
-        n=st.integers(1, 8),
-        gb=st.floats(0.1, 4.0),
-    )
-    def test_incast_regression_any_fan_in(n, gb):
+    @pytest.mark.slow
+    @FULL
+    @given(**FANIN_STRATEGY)
+    def test_fanin_finish_times_monotone_under_removal(sizes, drop):
+        _prop_fanin_finish_times_monotone_under_removal(sizes, drop)
+
+    @FAST
+    @given(**FANIN_STRATEGY)
+    def test_fanin_finish_times_monotone_under_removal_fast(sizes, drop):
+        _prop_fanin_finish_times_monotone_under_removal(sizes, drop)
+
+    INCAST_STRATEGY = dict(n=st.integers(1, 8), gb=st.floats(0.1, 4.0))
+
+    def _prop_incast_regression_any_fan_in(n, gb):
         """n equal flows into one ingress: each gets BW/n, all finish at
         n * |M| / BW — the old KVMigrationChannel fair-share result."""
         sim = FlowSim(_flat_cluster(n + 1, hosts_per_leaf=n + 1))
@@ -419,3 +654,53 @@ if HAVE_HYPOTHESIS:
         sim.advance_to(1e5)
         for f in fs:
             assert f.finished_at == pytest.approx(n * gb, rel=1e-6)
+
+    @pytest.mark.slow
+    @settings(max_examples=25, deadline=None)
+    @given(**INCAST_STRATEGY)
+    def test_incast_regression_any_fan_in(n, gb):
+        _prop_incast_regression_any_fan_in(n, gb)
+
+    @FAST
+    @given(**INCAST_STRATEGY)
+    def test_incast_regression_any_fan_in_fast(n, gb):
+        _prop_incast_regression_any_fan_in(n, gb)
+
+    LATENCY_STRATEGY = dict(
+        link_lat=st.floats(0.0, 0.5),
+        switch_lat=st.floats(0.0, 0.2),
+        gb=st.floats(0.05, 4.0),
+        cross_leaf=st.booleans(),
+    )
+
+    def _prop_latency_model_exact_and_monotone(link_lat, switch_lat, gb, cross_leaf):
+        """Dedicated-link finish time is EXACTLY path latency + size/BW;
+        doubling either latency term never speeds a transfer up; and the
+        latency->0 limit is the pure bandwidth model."""
+        topo = _flat_cluster(4, hosts_per_leaf=2)
+        dst = 3 if cross_leaf else 1
+        n_links, n_switch = (4, 3) if cross_leaf else (2, 1)
+
+        def finish(ll, sl):
+            sim = FlowSim(topo, link_latency_s=ll, switch_latency_s=sl)
+            f = sim.start(Flow(FlowKind.KV_MIGRATION, 0, dst, gb * GB), 0.0)
+            sim.advance_to(1e5)
+            return f.finished_at
+
+        t = finish(link_lat, switch_lat)
+        expect = gb + n_links * link_lat + n_switch * switch_lat
+        assert t == pytest.approx(expect, rel=1e-9)
+        assert finish(2 * link_lat, switch_lat) >= t - 1e-9
+        assert finish(link_lat, 2 * switch_lat) >= t - 1e-9
+        assert finish(0.0, 0.0) == pytest.approx(gb, rel=1e-9)
+
+    @pytest.mark.slow
+    @FULL
+    @given(**LATENCY_STRATEGY)
+    def test_latency_model_exact_and_monotone(link_lat, switch_lat, gb, cross_leaf):
+        _prop_latency_model_exact_and_monotone(link_lat, switch_lat, gb, cross_leaf)
+
+    @FAST
+    @given(**LATENCY_STRATEGY)
+    def test_latency_model_exact_and_monotone_fast(link_lat, switch_lat, gb, cross_leaf):
+        _prop_latency_model_exact_and_monotone(link_lat, switch_lat, gb, cross_leaf)

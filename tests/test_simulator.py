@@ -89,6 +89,70 @@ def test_multicast_plan_used_for_batch_scales():
     assert r.net_scale_bytes > 0
 
 
+def test_per_request_kv_flows_replace_background_streams():
+    """Request-granular serving traffic: every served request ships its
+    actual KV volume over the network (bounded by the trace's total), and
+    no persistent background stream exists anymore; the legacy flag
+    restores the PR-3 background-stream model."""
+    tr = _trace(40.0, 3.0)
+    s = sim.Simulator(sim.BLITZ, PROF, seed=0)
+    r = s.run(tr)
+    total = sum(traces.request_kv_bytes(p, PROF.kv_bytes_per_token)
+                for _, p, _ in tr)
+    assert 0 < r.kv_stream_bytes <= total
+    assert not s._serving_flows  # no persistent streams in kv mode
+    for req in r.requests:
+        assert req.prefill_done is not None and req.decoded >= req.output
+
+    legacy = sim.Simulator(sim.BLITZ, PROF, seed=0, per_request_kv=False)
+    rl = legacy.run(tr)
+    assert rl.kv_stream_bytes == 0.0
+    assert legacy._serving_flows  # background streams still synced
+
+
+def test_latency_terms_stretch_scale_up_times():
+    """Per-hop latency adds a floor to every multicast hop: the same trace
+    under 5 ms/hop propagation must show strictly larger mean scale-up
+    duration, while zero latency reproduces the default exactly."""
+    tr = _trace(60.0, 6.0, seed=3)
+    base = sim.run_system(sim.BLITZ, PROF, tr)
+    lat = sim.Simulator(
+        sim.BLITZ, PROF, seed=0, link_latency_s=5e-3, switch_latency_s=1e-3
+    ).run(tr)
+    zero = sim.Simulator(
+        sim.BLITZ, PROF, seed=0, link_latency_s=0.0, switch_latency_s=0.0
+    ).run(tr)
+    assert base.scale_events > 0 and lat.scale_events > 0
+    # compare the FIRST scale event: both runs are identical up to that
+    # point, so its duration isolates the latency floor (later events sit
+    # on diverged autoscaler trajectories and are not comparable)
+    assert lat.scale_seconds[0] > base.scale_seconds[0]
+    assert zero.scale_seconds == base.scale_seconds
+    for req in lat.requests:
+        assert req.decoded >= req.output  # realism never drops a request
+
+
+def test_dead_kv_source_pays_a_re_prefill_not_a_free_handoff():
+    """When the device holding a request's frozen KV dies, the request is
+    re-prefilled on a healthy instance (compute time paid, KV re-routed
+    from the new device) — it does NOT teleport to decode for free."""
+    tr = _trace(40.0, 4.0, seed=2)
+    s = sim.Simulator(sim.BLITZ, PROF, seed=0)
+
+    def kill_first_prefill(s_):
+        pres = s_._active_instances("prefill")
+        if pres:
+            s_.flowsim.fail_device(pres[0].device_ids[0], s_.now)
+
+    # repeated kills across the burst guarantee some handoff hits a dead src
+    for t in (6.0, 8.0, 10.0):
+        s.schedule(t, kill_first_prefill)
+    r = s.run(tr)
+    assert r.kv_re_prefills > 0
+    done = sum(1 for req in r.requests if req.decoded >= req.output)
+    assert done >= 0.9 * len(r.requests)  # the cluster still serves
+
+
 @pytest.mark.parametrize("name", ["burstgpt", "azure_code", "azure_conv"])
 def test_traces_have_burst_structure(name):
     tr = traces.TRACES[name](duration=120.0, seed=1)
