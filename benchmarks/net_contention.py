@@ -12,7 +12,12 @@ bandwidth models could not express.  Two extras since the latency PR:
     latency-dominated, bulk transfers are not;
   * a leaf-failure scenario through the MaaS FleetScheduler: a leaf dies
     mid-live-scale and the cold start completes via the scheduler's
-    failure-subscription re-grant, NOT via the runtime drain path.
+    failure-subscription re-grant, NOT via the runtime drain path;
+  * a deep-vs-wide planning scenario: with switching delay dominating,
+    bandwidth-only Algorithm-11 planning serializes every target into one
+    deep chain while latency-aware planning splits into shallow chains —
+    the realized (FlowSim) completion gap is the headline of the
+    planner/data-plane convergence PR.
 
     PYTHONPATH=src python -m benchmarks.net_contention [--smoke]
 """
@@ -120,6 +125,50 @@ def run_per_request_drain(*, latency: bool):
     ]
     sim.advance_to(1e6)
     return max(f.finished_at for f in flows)
+
+
+def run_deep_vs_wide():
+    """Latency-aware planning headline.  Single leaf, two model sources,
+    switching delay dominating per-hop cost: bandwidth-only Algorithm 11
+    chains every target behind ONE source (deep serial store-and-forward),
+    latency-aware planning re-ranks source selection on projected arrival
+    and splits the targets across both sources.  Returns
+    (depth_bw, t_bw, depth_lat, t_lat, analytic_lat) with ``t_*`` the
+    FlowSim-REALIZED completion of each plan under identical latency."""
+    n_tgts = 4 if smoke() else 6
+    model_bytes = int(1e8) if smoke() else int(2e8)
+    link_lat, switch_lat = 0.01, 0.05
+    topo = tp.make_cluster(2 + n_tgts, 1, hosts_per_leaf=2 + n_tgts, bw_gbps=8.0)
+    srcs = [0, 1]
+    for i in srcs:
+        topo.device(i).model = "m"
+        topo.device(i).role = tp.Role.DECODE
+    tgts = [d.id for d in topo.spares()]
+
+    def depth(plan):
+        return max((len(c.edges) for c in plan.chains), default=0)
+
+    def realize(plan):
+        sim = FlowSim(topo, link_latency_s=link_lat, switch_latency_s=switch_lat)
+        ex = MulticastExecution(plan, model_bytes)
+        ex.start(sim, 0.0)
+        sim.advance_to(1e6)
+        assert ex.done, "multicast execution never completed"
+        return ex.done_at
+
+    plan_bw = mc.plan_multicast(topo, srcs, tgts, len(tgts))
+    view = FlowSim(topo, link_latency_s=link_lat, switch_latency_s=switch_lat)
+    plan_lat = mc.plan_multicast(
+        topo, srcs, tgts, len(tgts), net=view, model_bytes=model_bytes
+    )
+    assert mc.validate_plan(topo, plan_lat) == []
+    return (
+        depth(plan_bw),
+        realize(plan_bw),
+        depth(plan_lat),
+        realize(plan_lat),
+        plan_lat.transfer_seconds(model_bytes),
+    )
 
 
 def run_leaf_failure_regrant():
@@ -237,6 +286,16 @@ def main():
     # ... and request-granular drains are measurably latency-bound
     assert perreq_lat[2] > perreq[2], (perreq, perreq_lat)
 
+    depth_bw, t_bw, depth_lat, t_lat, analytic = run_deep_vs_wide()
+    print("\ndeep-vs-wide planning under dominant switching latency: "
+          "bandwidth-only depth %d realizes %.3fs; latency-aware depth %d "
+          "realizes %.3fs (analytic prediction %.3fs)" %
+          (depth_bw, t_bw, depth_lat, t_lat, analytic))
+    assert depth_lat < depth_bw, "latency-aware planner did not go wider"
+    assert t_lat < t_bw, "latency-aware plan did not realize faster"
+    # planner/data-plane convergence: analytic time within 1% of realized
+    assert abs(analytic - t_lat) <= 0.01 * t_lat, (analytic, t_lat)
+
     t_recover, regrants, left_for_drain = run_leaf_failure_regrant()
     print("\nleaf failure mid-live-scale: all requests served %.2fs after "
           "the failure via %d scheduler re-grant(s); doomed engines left "
@@ -245,8 +304,10 @@ def main():
     assert regrants >= 1, "failure subscription never re-granted"
     assert left_for_drain == 0, "runtime drain path handled the failure"
     print("\ncontention, degradation, oversubscription and latency all "
-          "measurably stretch scale-up and drain completion — and a leaf "
-          "failure completes via scheduler re-grant, not runtime drain")
+          "measurably stretch scale-up and drain completion; latency-aware "
+          "planning beats bandwidth-only chains when switching delay "
+          "dominates — and a leaf failure completes via scheduler re-grant, "
+          "not runtime drain")
     return rows
 
 

@@ -23,18 +23,46 @@ Key ideas implemented here:
     have ``g`` devices each holding/awaiting the full parameters, each source
     device ships ``1/g`` of the bytes and the target scale-up domain
     AllGathers — a ``g x`` speedup.
+  * **Latency-aware ranking** (post-Fig. 13a realism): when the caller
+    passes the data plane's latency view (``net=`` a ``FlowSim`` or
+    ``NetworkModel``), chain cost is no longer bandwidth-only — hop ``k``
+    of a pipelined chain cannot deliver byte 0 before ``k`` store-and-
+    forward stages have elapsed, so a target's projected arrival is
+    ``max over chain prefix j of (cum_latency_j + |M|/BW_j)``.  Source
+    selection, fastest-first target ordering and multi-chain splitting all
+    re-rank on that cost, so deep serial chains lose to wider/shallower
+    plans when switching delay dominates and the analytic
+    ``transfer_seconds`` matches the FlowSim-realized completion.  A
+    zero-latency network plans bit-for-bit like the bandwidth-only
+    planner (golden-trace pinned).
 
-The planner is greedy and runs in ``O(S log S + T log T)`` — the paper's
-answer to NP-hard optimal multicast on heterogeneous networks.
+The planner is greedy and runs in ``O(S log S + T log T)`` bandwidth-only
+and ``O(S * T)`` latency-aware — the paper's answer to NP-hard optimal
+multicast on heterogeneous networks.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
-from typing import Iterable, Sequence
+from typing import Iterable, Protocol, Sequence
 
-from repro.core.topology import Device, Role, Topology, gbps_to_bytes_per_s
+from repro.core.topology import (
+    NVLINK_GBPS,
+    Device,
+    Role,
+    Topology,
+    gbps_to_bytes_per_s,
+)
+
+
+class LatencyView(Protocol):
+    """What the planner needs from the data plane: per-hop first-byte
+    latency.  Both ``repro.net.FlowSim`` and ``repro.net.NetworkModel``
+    satisfy it; tests may pass any duck-typed stand-in."""
+
+    def hop_latency(self, src: int, dst: int) -> float: ...  # pragma: no cover
 
 
 # ---------------------------------------------------------------------------
@@ -65,6 +93,8 @@ class Edge:
     bw_gbps: float  # effective bandwidth of this hop (after Fig.14 sharding)
     sharded_ways: int  # Fig. 14 parallelism factor
     intra_scaleup: bool = False  # NVLink/ICI hop — uses no scale-out link
+    latency_s: float = 0.0  # first-byte (link + switch) latency of this hop,
+    #   as the data plane charges it (0.0 when planned bandwidth-only)
 
 
 @dataclasses.dataclass
@@ -77,15 +107,43 @@ class Chain:
         return self.nodes[1:]
 
     @property
+    def is_degenerate(self) -> bool:
+        """A source-only chain (no edges) moves no bytes: it has no
+        bottleneck to rank on and zero transfer time.  Callers ranking or
+        dividing by chain speed must branch on this explicitly — a
+        degenerate chain covers no target and must not win any ranking."""
+        return not self.edges
+
+    @property
     def bottleneck_gbps(self) -> float:
-        return min(e.bw_gbps for e in self.edges) if self.edges else float("inf")
+        """Slowest hop of the chain.  ``inf`` for a degenerate (edge-less)
+        chain by convention — check :attr:`is_degenerate` before using this
+        in a ranking or as a divisor."""
+        if self.is_degenerate:
+            return math.inf
+        return min(e.bw_gbps for e in self.edges)
+
+    @property
+    def latency_seconds(self) -> float:
+        """Total store-and-forward first-byte latency along the chain."""
+        return sum(e.latency_s for e in self.edges)
 
     def transfer_seconds(self, model_bytes: int) -> float:
-        """Fig. 13a: pipelined chain time ~= |M| / bottleneck_BW, independent
-        of chain length (per-hop latency of one block is negligible)."""
-        if not self.edges:
+        """Pipelined chain completion under the latency model: hop ``k``'s
+        last byte lands at ``cum_latency_k + |M| / BW_k`` (its first byte
+        waits for every upstream store-and-forward stage), so the chain
+        completes at the max over hops.  At zero latency this reduces to
+        the Fig. 13a ``|M| / bottleneck_BW`` exactly — independent of chain
+        length; with uniform hop bandwidth it is the closed form
+        ``|M|/bottleneck_BW + sum(per-hop latency)``.  Degenerate (edge-
+        less) chains explicitly take zero time — they move no bytes."""
+        if self.is_degenerate:
             return 0.0
-        return model_bytes / gbps_to_bytes_per_s(self.bottleneck_gbps)
+        done, cum_lat = 0.0, 0.0
+        for e in self.edges:
+            cum_lat += e.latency_s
+            done = max(done, cum_lat + model_bytes / gbps_to_bytes_per_s(e.bw_gbps))
+        return done
 
     @property
     def tail(self) -> Node:
@@ -153,6 +211,31 @@ def _prune_sources(topo: Topology, src_ids: Sequence[int]) -> tuple[list[int], l
     return kept, pruned
 
 
+def _hop_stats(
+    net: LatencyView | None, src: Node, dst: Node
+) -> tuple[float, float, int, bool]:
+    """(latency_s, effective_bw_gbps, sharded_ways, intra_scaleup) of the
+    hop ``src -> dst`` — the same Fig. 14 arithmetic the selection loop
+    applies, plus the data plane's per-hop latency (max across the sharded
+    sibling pairs, exactly as ``MulticastExecution`` charges it)."""
+    ways = min(src.size, dst.size)
+    intra = src.scaleup == dst.scaleup and not src.is_host
+    if intra:
+        eff_bw = NVLINK_GBPS * ways
+    else:
+        eff_bw = min(src.agg_bw_gbps / src.size, dst.agg_bw_gbps / dst.size) * ways
+    lat = 0.0
+    if net is not None:
+        lat = max(
+            (
+                net.hop_latency(s, d)
+                for s, d in zip(src.device_ids[:ways], dst.device_ids[:ways])
+            ),
+            default=0.0,
+        )
+    return lat, eff_bw, ways, intra
+
+
 def plan_multicast(
     topo: Topology,
     src_ids: Sequence[int],
@@ -160,14 +243,27 @@ def plan_multicast(
     n: int,
     *,
     allow_interference: bool = False,
+    net: LatencyView | None = None,
+    model_bytes: int | None = None,
 ) -> MulticastPlan:
     """Generate the scale plan: load parameters from ``src_ids`` onto ``n``
     devices drawn from ``tgt_ids`` (Algorithm 11).
 
     ``allow_interference=True`` disables Line-1 pruning — the ablation
     baseline showing 1.5x slower scaling / 50% worse tail TBT (Fig. 8).
+
+    ``net`` is the data plane's latency view (a ``repro.net.FlowSim`` or
+    ``NetworkModel``; anything with ``hop_latency(src, dst)``).  When it
+    carries any latency, source selection and target ordering rank on
+    projected arrival time — ``max over chain prefix of (cumulative hop
+    latency + |M|/hop_BW)`` — instead of bandwidth alone; pass
+    ``model_bytes`` so the bandwidth term is weighed correctly (omitting it
+    makes the ranking latency-dominated).  A zero-latency ``net`` (or
+    ``net=None``) reproduces the bandwidth-only plan bit-for-bit.
     """
     t0 = time.perf_counter()
+    lat_aware = net is not None and getattr(net, "has_latency", True)
+    mbytes = float(model_bytes) if model_bytes else 0.0
 
     # Line 1: prune + group sources by leaf, fastest leaf first
     if allow_interference:
@@ -197,17 +293,49 @@ def plan_multicast(
 
     # Line 2-3: group targets by scale-up domain, order groups (a) by the
     # leaf order of the sources (intra-leaf chains first) then (b) by
-    # decreasing aggregate bandwidth (Fig. 13b fastest-first).
+    # decreasing aggregate bandwidth (Fig. 13b fastest-first) — or, when
+    # latency-aware, by the projected first-hop arrival from the initial
+    # source set, so a high-bandwidth target behind a slow link no longer
+    # jumps the queue.
     tgt_nodes = _group_nodes(topo, list(tgt_ids), is_source=False)
     src_leaf_rank = {lf: r for r, lf in enumerate(leaf_order)}
-    tgt_nodes.sort(key=lambda nd: (src_leaf_rank.get(nd.leaf, 1 << 30), -nd.agg_bw_gbps))
+    if lat_aware and src_queue:
+        init_srcs = list(src_queue)
+
+        def _tgt_eta(nd: Node) -> float:
+            best = math.inf
+            for s in init_srcs:
+                lat, eff_bw, _, _ = _hop_stats(net, s, nd)
+                best = min(best, lat + mbytes / gbps_to_bytes_per_s(eff_bw))
+            return best
+
+        tgt_nodes.sort(
+            key=lambda nd: (
+                src_leaf_rank.get(nd.leaf, 1 << 30),
+                _tgt_eta(nd),
+                -nd.agg_bw_gbps,
+            )
+        )
+    else:
+        tgt_nodes.sort(
+            key=lambda nd: (src_leaf_rank.get(nd.leaf, 1 << 30), -nd.agg_bw_gbps)
+        )
 
     # Lines 4-10: pop target groups; prefer same-leaf sources with enough
-    # aggregate bandwidth; freshly scaled targets become sources (chains).
+    # aggregate bandwidth (or, latency-aware, whichever source yields the
+    # earliest projected arrival — which is what splits deep chains into
+    # wider plans when switching delay dominates); freshly scaled targets
+    # become sources (chains).
     chains: list[Chain] = []
     chain_of: dict[int, Chain] = {}  # scaleup id of last node -> its chain
     covered: list[int] = []
     m = 0
+    # latency-aware chain state, keyed by id() of the live queue-node object
+    # (nodes stay referenced by the queue/chains, so ids are stable):
+    # cumulative store-and-forward latency at the node, and the node's own
+    # projected arrival (original sources: 0.0 — they hold the parameters)
+    cum_lat: dict[int, float] = {}
+    arrive: dict[int, float] = {}
 
     for g_tgt in tgt_nodes:
         if m >= n:
@@ -221,35 +349,45 @@ def plan_multicast(
                 agg_bw_gbps=sum(topo.bw(i) for i in g_tgt.device_ids[:keep]),
             )
 
-        # Scale-up shortcut: a source inside the *same* NVLink/ICI domain
-        # covers the target at scale-up speed (near-free — §5.1 modelling)
-        same_su = [s for s in src_queue if s.scaleup == take.scaleup and not s.is_host]
-        # Line 6-7: source selection — same leaf first
-        same_leaf = [s for s in src_queue if s.leaf == take.leaf]
         pick: Node | None = None
-        intra_scaleup = False
-        if same_su:
-            pick = max(same_su, key=lambda s: s.agg_bw_gbps)
-            intra_scaleup = True
-        elif same_leaf and sum(s.agg_bw_gbps for s in same_leaf) >= take.agg_bw_gbps:
-            pick = max(same_leaf, key=lambda s: s.agg_bw_gbps)
-        elif src_queue:
-            pick = max(src_queue, key=lambda s: s.agg_bw_gbps)
-        if pick is None:
-            break  # no sources at all — caller must register a host copy
+        if lat_aware:
+            if not src_queue:
+                break  # no sources at all — caller must register a host copy
+
+            def _cost(s: Node) -> tuple[float, float]:
+                lat, eff_bw, _, _ = _hop_stats(net, s, take)
+                cum = cum_lat.get(id(s), 0.0) + lat
+                eta = max(
+                    arrive.get(id(s), 0.0),
+                    cum + mbytes / gbps_to_bytes_per_s(eff_bw),
+                )
+                return (eta, -s.agg_bw_gbps)
+
+            pick = min(src_queue, key=_cost)
+        else:
+            # Scale-up shortcut: a source inside the *same* NVLink/ICI
+            # domain covers the target at scale-up speed (near-free — §5.1)
+            same_su = [
+                s for s in src_queue if s.scaleup == take.scaleup and not s.is_host
+            ]
+            # Line 6-7: source selection — same leaf first
+            same_leaf = [s for s in src_queue if s.leaf == take.leaf]
+            if same_su:
+                pick = max(same_su, key=lambda s: s.agg_bw_gbps)
+            elif same_leaf and sum(s.agg_bw_gbps for s in same_leaf) >= take.agg_bw_gbps:
+                pick = max(same_leaf, key=lambda s: s.agg_bw_gbps)
+            elif src_queue:
+                pick = max(src_queue, key=lambda s: s.agg_bw_gbps)
+            if pick is None:
+                break  # no sources at all — caller must register a host copy
 
         # Fig. 14: parallel sharded transfer when both endpoints have g
         # devices with (to-be-)duplicated parameters
-        ways = min(pick.size, take.size)
-        if intra_scaleup:
-            from repro.core.topology import NVLINK_GBPS
-
-            eff_bw = NVLINK_GBPS * ways
-        else:
-            link = min(pick.agg_bw_gbps / pick.size, take.agg_bw_gbps / take.size)
-            eff_bw = link * ways
+        hop_lat, eff_bw, ways, intra_scaleup = _hop_stats(
+            net if lat_aware else None, pick, take
+        )
         edge = Edge(src=pick, dst=take, bw_gbps=eff_bw, sharded_ways=ways,
-                    intra_scaleup=intra_scaleup)
+                    intra_scaleup=intra_scaleup, latency_s=hop_lat)
 
         # the picked node's scale-out egress now carries this chain's
         # forwarding traffic — it must not head a second chain (full-duplex
@@ -270,7 +408,14 @@ def plan_multicast(
         chain_of[take.scaleup] = ch
 
         # Line 10: the freshly scaled group becomes a source for what follows
-        src_queue.insert(0, dataclasses.replace(take, is_source=False))
+        fresh = dataclasses.replace(take, is_source=False)
+        src_queue.insert(0, fresh)
+        if lat_aware:
+            cum_lat[id(fresh)] = cum_lat.get(id(pick), 0.0) + hop_lat
+            arrive[id(fresh)] = max(
+                arrive.get(id(pick), 0.0),
+                cum_lat[id(fresh)] + mbytes / gbps_to_bytes_per_s(eff_bw),
+            )
         covered.extend(take.device_ids)
         m += take.size
 
@@ -302,9 +447,21 @@ def validate_plan(topo: Topology, plan: MulticastPlan) -> list[str]:
     for e in plan.all_edges():
         if e.intra_scaleup:
             continue  # NVLink/ICI hop — no scale-out link involved
-        for i in e.src.device_ids[: e.sharded_ways]:
+        # a sharded edge can never span more device pairs than its smaller
+        # endpoint: a larger sharded_ways would silently truncate in the
+        # slices below and under-count link usage, so flag AND clamp it
+        # (the accounting stays sound on whatever pairs actually transfer)
+        ways = min(len(e.src.device_ids), len(e.dst.device_ids))
+        if e.sharded_ways > ways:
+            errors.append(
+                f"edge {e.src.device_ids}->{e.dst.device_ids}: sharded_ways "
+                f"{e.sharded_ways} exceeds endpoint size {ways}"
+            )
+        else:
+            ways = e.sharded_ways
+        for i in e.src.device_ids[:ways]:
             egress_used[i] = egress_used.get(i, 0) + 1
-        for i in e.dst.device_ids[: e.sharded_ways]:
+        for i in e.dst.device_ids[:ways]:
             ingress_used[i] = ingress_used.get(i, 0) + 1
 
     for i, cnt in egress_used.items():
@@ -323,9 +480,17 @@ def validate_plan(topo: Topology, plan: MulticastPlan) -> list[str]:
 
 
 def chain_time_model(
-    model_bytes: int, chain_bw_gbps: float, n_targets: int, *, pipelined: bool = True
+    model_bytes: int,
+    chain_bw_gbps: float,
+    n_targets: int,
+    *,
+    pipelined: bool = True,
+    total_latency_s: float = 0.0,
 ) -> float:
-    """Fig. 13a analytic model: pipelined chain time is ~|M|/B regardless of
-    n; unpipelined (store-and-forward of the whole model) is n*|M|/B."""
+    """Fig. 13a analytic model with the latency term: pipelined chain time
+    is ~|M|/B + the chain's total store-and-forward first-byte latency
+    (``Chain.latency_seconds``), regardless of n; unpipelined
+    (store-and-forward of the whole model) is n*|M|/B + the same latency.
+    ``total_latency_s=0`` is the original pure-bandwidth model."""
     base = model_bytes / gbps_to_bytes_per_s(chain_bw_gbps)
-    return base if pipelined else base * max(n_targets, 1)
+    return (base if pipelined else base * max(n_targets, 1)) + total_latency_s

@@ -286,6 +286,7 @@ class Simulator:
         spine_oversub: float = 1.0,
         link_latency_s: float = 0.0,
         switch_latency_s: float = 0.0,
+        link_profiles=None,
         per_request_kv: bool = True,
         seed: int = 0,
     ):
@@ -315,6 +316,7 @@ class Simulator:
             spine_oversub=spine_oversub,
             link_latency_s=link_latency_s,
             switch_latency_s=switch_latency_s,
+            link_profiles=link_profiles,
         )
         self.pool = ParameterPool(self.topo)
         self.pool.register(prof.name, prof.param_bytes)
@@ -492,10 +494,13 @@ class Simulator:
             # ONE Algorithm-11 plan covers the whole batch (multi-chain);
             # plan_multicast falls back to the O(1) host copy when every
             # GPU source is pruned or absent (hosts are in the topology).
-            # Planned while the targets are still role-FREE.
+            # Planned while the targets are still role-FREE, against the
+            # FlowSim's latency view so the planner prices the same
+            # store-and-forward delays the data plane will charge.
             plan = mc.plan_multicast(
                 self.topo, gpu_srcs, tgt_ids, len(tgt_ids),
                 allow_interference=self.sys.allow_interference,
+                net=self.flowsim, model_bytes=pb,
             )
 
         insts: list[Instance] = []
@@ -512,7 +517,10 @@ class Simulator:
 
         if plan is not None:
             t_est = plan.transfer_seconds(pb)
-            if not plan.chains or not math.isfinite(t_est):
+            # degenerate plans (no chains, or only edge-less source-only
+            # chains -> t_est == 0) must not feed the live-boost ramp an
+            # instant/absurd rate: fall back to the analytic unicast time
+            if not plan.chains or t_est <= 0.0 or not math.isfinite(t_est):
                 t_est = pb / gbps_to_bytes_per_s(min(self.pcie_gbps, self.net_gbps))
             exec_ = MulticastExecution(plan, pb, on_node_ready=self._node_ready)
             exec_.start(self.flowsim, self.now)

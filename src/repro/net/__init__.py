@@ -31,6 +31,7 @@ from repro.net.links import (
     LEAF_UP,
     SCALEUP,
     Link,
+    LinkProfile,
     NetworkModel,
 )
 from repro.net.multicast_exec import MulticastExecution
@@ -44,6 +45,7 @@ __all__ = [
     "maxmin_rates",
     "MulticastExecution",
     "Link",
+    "LinkProfile",
     "NetworkModel",
     "DEV_IN",
     "DEV_OUT",

@@ -103,6 +103,7 @@ class FlowSim:
         scaleup_gbps: float = NVLINK_GBPS,
         link_latency_s: float = 0.0,
         switch_latency_s: float = 0.0,
+        link_profiles=None,
     ):
         self.net = NetworkModel(
             topo,
@@ -111,6 +112,7 @@ class FlowSim:
             scaleup_gbps=scaleup_gbps,
             link_latency_s=link_latency_s,
             switch_latency_s=switch_latency_s,
+            link_profiles=link_profiles,
         )
         self.flows: list[Flow] = []
         self.now = 0.0
@@ -137,10 +139,24 @@ class FlowSim:
             cb(event)
 
     # -- latency -------------------------------------------------------------
+    @property
+    def has_latency(self) -> bool:
+        """True when any link carries a latency term — the flag the multicast
+        planner keys its latency-aware ranking on (a zero-latency network
+        plans bit-for-bit like the pure bandwidth model)."""
+        return self.net.has_latency
+
     def route_latency(self, src: int, dst: int) -> float:
-        """Nominal (plane-0) first-byte latency of a src->dst path — what a
-        multicast planner should budget per chain hop."""
-        return self.net.path_latency(self.net.path(src, dst, plane=0))
+        """Nominal (plane-0) first-byte latency of a src->dst path."""
+        return self.net.route_latency(src, dst)
+
+    def hop_latency(self, src: int, dst: int) -> float:
+        """Worst-case src->dst first-byte latency across live spine planes —
+        what a multicast planner (and a chain execution charging downstream
+        hops their upstream store-and-forward delay) should budget per hop:
+        routing picks planes by load, not latency, so the slowest live plane
+        bounds when the next hop's first byte can move."""
+        return self.net.hop_latency(src, dst)
 
     def _flow_latency(self, flow: Flow) -> float:
         return self.net.path_latency(flow.path) + flow.extra_latency_s
@@ -166,6 +182,16 @@ class FlowSim:
 
     def device_ok(self, dev: int) -> bool:
         return self.net.device_ok(dev)
+
+    def dead_devices(self) -> set[int]:
+        """Accelerators whose NIC (either direction) is failed — the ONE
+        definition of 'dead' every failure-subscription control plane
+        (FleetScheduler, standalone ClusterRuntime) tears down against."""
+        return {
+            d.id
+            for d in self.net.topo.devices
+            if not d.is_host and not self.net.device_ok(d.id)
+        }
 
     # -- flow lifecycle ------------------------------------------------------
     def start(self, flow: Flow, now: float | None = None) -> Flow:

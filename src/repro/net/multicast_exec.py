@@ -140,9 +140,19 @@ class MulticastExecution:
         """Under the latency model, hop ``k`` of a pipelined forwarding
         chain cannot deliver its first byte before the store-and-forward
         latencies of hops ``0..k-1`` have elapsed — charge each hop the
-        cumulative latency of its upstream edges as ``extra_latency_s``
-        (parallel sharded hops of one edge pay the slowest of the edge).
-        Zero-latency networks leave every flow untouched."""
+        cumulative latency of its upstream edges as ``extra_latency_s``.
+        Parallel sharded sibling flows of one edge are shards of the SAME
+        store-and-forward stage, so downstream hops pay the slowest
+        sibling (``max``), and each hop budgets ``FlowSim.hop_latency`` —
+        the worst latency across live spine planes, since routing picks
+        planes by load, not latency: the per-flow charge (its actual
+        routed path + this prefix) can never exceed what downstream hops
+        budgeted for it, which is what keeps hop-k first bytes causally
+        behind hop-(k-1) under heterogeneous per-plane profiles.  This is
+        the same per-hop value the latency-aware planner sums, so analytic
+        ``MulticastPlan.transfer_seconds`` matches realized completion on
+        uncontended networks.  Zero-latency networks leave every flow
+        untouched."""
         by_chain: dict[int, list[_EdgeState]] = {}
         for st in self.edges:
             by_chain.setdefault(st.chain_idx, []).append(st)
@@ -153,7 +163,7 @@ class MulticastExecution:
                 for f in st.flows:
                     f.extra_latency_s = prefix
                     if f.kind is FlowKind.MULTICAST_HOP:
-                        edge_lat = max(edge_lat, sim.route_latency(f.src, f.dst))
+                        edge_lat = max(edge_lat, sim.hop_latency(f.src, f.dst))
                 prefix += edge_lat
 
     def cancel(self, sim: FlowSim | None = None, now: float | None = None) -> None:

@@ -35,7 +35,7 @@ from repro.core import topology as topo_mod
 from repro.core.autoscaler import Autoscaler, LoadSample, PolicyConfig
 from repro.core.live_scaling import LiveSession
 from repro.core.parameter_pool import ParameterPool
-from repro.net import FlowSim, MulticastExecution
+from repro.net import FAILURE_KINDS, FlowSim, MulticastExecution, NetEvent
 from repro.serving.disagg import pools as P
 from repro.serving.disagg.kv_migration import KVMigrationChannel, make_payload
 from repro.serving.engine import InstanceEngine, ServeRequest
@@ -61,8 +61,11 @@ class RuntimeStats:
     aborted_param_streams: int = 0  # live-scales killed by a link/NIC failure
     remigrations: int = 0  # KV migrations re-targeted after a failure
     re_prefills: int = 0  # requests re-prefilled after their source died
-    cancelled_scales: int = 0  # doomed live-scales torn down by the fleet's
-    #   failure subscription (immediate, instead of the drain/retire path)
+    cancelled_scales: int = 0  # doomed live-scales torn down by a failure
+    #   subscription (fleet's or the runtime's own — immediate, instead of
+    #   the drain/retire path)
+    failure_replans: int = 0  # engines re-provisioned by the runtime's OWN
+    #   failure subscription, inside the failure event
 
 
 class ClusterRuntime:
@@ -85,6 +88,7 @@ class ClusterRuntime:
         param_pool: ParameterPool | None = None,
         allowed_devices: Iterable[int] | None = None,
         net: FlowSim | None = None,
+        failure_subscription: bool = True,
         verbose: bool = False,
     ):
         self.cfg = cfg
@@ -116,6 +120,18 @@ class ClusterRuntime:
         # under MaaS the fleet passes its shared instance so co-tenant
         # traffic contends too
         self.net = net if net is not None else FlowSim(topo)
+        # first-class failure subscription (mirrors the MaaS FleetScheduler):
+        # a link/device/leaf failure retires doomed LOADING engines and
+        # re-plans INSIDE the FlowSim event, not a tick later through the
+        # per-flow abort -> drain path.  The fleet passes False for its
+        # tenant runtimes — it subscribes once itself and drives the same
+        # teardown via fail_devices()/restart_scale(), so a runtime-level
+        # subscription would double-handle every failure.
+        self._failure_subscribed = failure_subscription
+        self._aborted_scales: set[int] = set()  # devs whose param stream
+        #   aborted, awaiting the failure event that always follows
+        if failure_subscription:
+            self.net.subscribe(self._on_net_event)
         self.pool = P.EnginePool(topo)
         self.channel = KVMigrationChannel(net=self.net)
         self.router = Router()
@@ -215,14 +231,40 @@ class ClusterRuntime:
         self.allowed_devices.difference_update(revoked)
         return revoked
 
+    def _on_net_event(self, event: NetEvent) -> None:
+        if event.kind in FAILURE_KINDS:
+            self._handle_net_failure(event.t)
+
+    def _handle_net_failure(self, now: float) -> None:
+        """React to a link/device/leaf failure the moment the FlowSim emits
+        it (standalone-runtime counterpart of the FleetScheduler's
+        subscription): retire doomed LOADING engines — those on dead
+        devices AND those whose parameter stream aborted without the device
+        dying (a severed spine path) — and re-plan each lost phase from
+        surviving sources, all inside the same event.  The per-flow abort
+        callback only *records* its device (aborts settle before the
+        failure event fires), so nothing is drained twice."""
+        doomed = self.net.dead_devices() | self._aborted_scales
+        self._aborted_scales.clear()
+        if not doomed:
+            return
+        lost = self.fail_devices(doomed, now)
+        if self.frozen:
+            return  # a parked/drained model must not re-provision itself
+        for phase in lost:
+            if self.restart_scale(phase, now) is not None:
+                self.stats.failure_replans += 1
+                self._log(f"[scale] failure re-plan -> {phase} live-scale")
+
     def fail_devices(self, dead: set[int], now: float) -> list[str]:
-        """Fleet failure subscription entry: tear down live-scales doomed by
-        ``dead`` devices RIGHT NOW — the engine is removed from the pool and
-        its device reclaimed immediately, instead of waiting for the
-        drain→retire path a tick later — and report the phases that lost an
-        engine so the caller can re-grant elsewhere.  Idempotent: an engine
-        already torn down is gone from the pool, so a second failure event
-        for the same devices finds nothing."""
+        """Failure-subscription teardown (fleet's or the runtime's own):
+        tear down live-scales doomed by ``dead`` devices RIGHT NOW — the
+        engine is removed from the pool and its device reclaimed
+        immediately, instead of waiting for the drain→retire path a tick
+        later — and report the phases that lost an engine so the caller can
+        re-provision elsewhere.  Idempotent: an engine already torn down is
+        gone from the pool, so a second failure event for the same devices
+        finds nothing."""
         lost: list[str] = []
         for pe in list(self.pool.all()):
             if pe.device_id not in dead or pe.session is None:
@@ -352,7 +394,18 @@ class ClusterRuntime:
         srcs = gpu_srcs or host_devs
         if not srcs:
             return None
-        plan = mc.plan_multicast(self.topo, srcs, [target], 1)
+        # the planner sees the same network the data plane simulates: hop
+        # latencies (heterogeneous profiles included) rank chains alongside
+        # bandwidth, so its transfer_seconds predicts realized arrival
+        plan = mc.plan_multicast(
+            self.topo, srcs, [target], 1,
+            net=self.net, model_bytes=self.model_bytes,
+        )
+        if target not in plan.covered:
+            # degenerate plan (source-only chains / nothing reachable):
+            # provisioning an engine on it would ramp from an instant
+            # analytic estimate with no bytes ever arriving
+            return None
         t_est = max(plan.transfer_seconds(self.model_bytes), 1e-6)
         exec_ = MulticastExecution(
             plan,
@@ -360,6 +413,14 @@ class ClusterRuntime:
             on_abort=lambda e, t, dev=target: self._param_stream_aborted(dev, t),
         )
         exec_.start(self.net, now)
+        if exec_.aborted:
+            # every hop aborted synchronously at start (no live route to the
+            # target — e.g. a fully severed uplink that killed no NIC, which
+            # device_ok cannot see).  The abort callback fired BEFORE the
+            # engine exists, so neither the drain path nor the failure
+            # subscription could ever clean it up: don't provision at all.
+            self._aborted_scales.discard(target)
+            return None
         has_inflow = bool(exec_.flows_into(target))
         session = LiveSession(
             n_layers=self.cfg.n_layers,
@@ -392,11 +453,19 @@ class ClusterRuntime:
         return pe
 
     def _param_stream_aborted(self, dev: int, t: float) -> None:
-        """A link/NIC failure killed the parameter stream mid-live-scale:
-        drain the half-loaded engine (it retires next tick, freeing the
-        device) so the scaling policy re-plans from surviving sources."""
+        """A link/NIC failure killed the parameter stream mid-live-scale.
+        When this runtime subscribes to FlowSim failure events, the abort
+        only *records* the device — aborts settle before the failure event
+        fires, and the subscription handler then retires the doomed engine
+        and re-plans inside that event (aborts with no failure event
+        attached are swept at the next tick).  Unsubscribed (fleet-managed)
+        runtimes keep the legacy behaviour: drain the half-loaded engine so
+        it retires next tick and the policy re-plans."""
         self._live_execs.pop(dev, None)
         self.stats.aborted_param_streams += 1
+        if self._failure_subscribed:
+            self._aborted_scales.add(dev)
+            return
         for pe in self.pool.all():
             if pe.device_id == dev and pe.state == P.LOADING:
                 self.pool.drain(pe)
@@ -436,6 +505,11 @@ class ClusterRuntime:
         #    then retire drained instances; free their devices (idle() holds
         #    retirement while KV migrations are still in flight toward one)
         self.net.advance_to(now)
+        if self._aborted_scales:
+            # param-stream aborts that no failure event followed (a flow
+            # started across an already-severed path): same teardown +
+            # re-plan as the subscription path, one tick later
+            self._handle_net_failure(now)
         for pe in self.pool.retire_idle():
             exec_ = self._live_execs.pop(pe.device_id, None)
             if exec_ is not None:

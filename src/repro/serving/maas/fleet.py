@@ -156,6 +156,10 @@ class FleetScheduler:
             n_prefill=n_prefill,
             n_decode=n_decode,
             net=self.net,
+            # the fleet subscribes to FlowSim failures once, fleet-wide,
+            # and drives teardown/re-grant itself — a per-runtime
+            # subscription would double-handle every failure
+            failure_subscription=False,
             **runtime_kw,
         )
         t = Tenant(cfg.name, rt, slo_class=slo_class)
@@ -291,11 +295,7 @@ class FleetScheduler:
         restart each lost engine on a surviving leaf — all within the same
         event, so a cold start survives a mid-flight leaf death without
         losing a tick."""
-        dead = {
-            d.id
-            for d in self.topo.devices
-            if not d.is_host and not self.net.device_ok(d.id)
-        }
+        dead = self.net.dead_devices()
         if not dead:
             return
         for t in self.tenants.values():

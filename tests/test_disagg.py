@@ -217,9 +217,11 @@ def test_mutated_engine_keeps_decoding_correctly():
 
 
 def test_failed_nic_aborts_live_scale_and_replans_elsewhere():
-    """A device-link failure mid-live-scale fires the flow abort callback:
-    the half-loaded engine drains, the failed device is never re-picked,
-    and the next live-scale lands on a healthy spare."""
+    """A device-link failure mid-live-scale is handled entirely by the
+    standalone runtime's OWN FlowSim failure subscription: the doomed
+    engine is torn down INSIDE the failure event (no drain/retire
+    round-trip), the failed device is never re-picked, and a replacement
+    live-scale starts on a healthy spare within the same event."""
     # one device per host: the live-scale hop crosses scale-out NICs (an
     # intra-scale-up hop would finish at NVLink speed before the failure)
     rt = _runtime(
@@ -233,14 +235,114 @@ def test_failed_nic_aborts_live_scale_and_replans_elsewhere():
     target = pe.device_id
     # the parameter stream is real flows on the shared FlowSim
     assert rt.net.flows_into(target)
+    retired_before = rt.stats.retired
     rt.net.fail_device(target, t + 0.01)
+    # abort recorded + engine torn down + replacement planned, all inside
+    # the failure event — zero ticks elapsed
     assert rt.stats.aborted_param_streams == 1
-    assert pe.state == P.DRAINING
+    assert rt.stats.cancelled_scales == 1
+    assert rt.stats.failure_replans == 1
+    assert all(pe2.device_id != target for pe2 in rt.pool.all())
+    repl = [pe2 for pe2 in rt.pool.all() if pe2.state == P.LOADING]
+    assert len(repl) == 1 and repl[0].device_id != target
     t += 0.02
-    rt.tick(t)  # retires the aborted engine, frees the device
+    rt.tick(t)
+    # nothing left for the drain path: no drain-path retirement happened
+    assert rt.stats.retired == retired_before
     assert all(pe2.device_id != target or pe2.state != P.LOADING for pe2 in rt.pool.all())
-    pe2 = rt._live_scale(P.PREFILL, t)
-    assert pe2 is not None and pe2.device_id != target  # re-planned elsewhere
+
+
+def test_leaf_failure_handled_entirely_by_runtime_subscription():
+    """Standalone-runtime mirror of the MaaS failure-subscription test
+    (test_maas.py): a leaf dies mid-live-scale and the runtime's OWN
+    FlowSim subscription retires the doomed LOADING engines and re-plans
+    inside the failure event — ZERO per-flow-abort drains, no
+    double-handling, and a replayed failure for the same devices is a
+    no-op."""
+    topo = tp.add_host_sources(tp.make_cluster(4, 2, hosts_per_leaf=1, bw_gbps=100.0))
+    rt = _runtime(
+        topo=topo,
+        n_prefill=1,
+        n_decode=1,
+        policy=PolicyConfig(max_instances=3, kv_upper=0.5),
+        prefill_capacity_tps=50.0,
+        decode_capacity_tps=20.0,
+        model_bytes=int(2e9),  # slow enough to catch the scale in flight
+    )
+    rng = np.random.default_rng(3)
+    now = 0.0
+    for _ in range(16):
+        rt.submit(rng.integers(0, CFG.vocab_size, size=16).astype(np.int32), 6, now)
+    loading = []
+    for _ in range(400):
+        now += 0.02
+        rt.tick(now)
+        # only fail a leaf that carries no initial engine, so the doomed
+        # set is exactly its LOADING engines
+        loading = [
+            pe for pe in rt.pool.all()
+            if pe.state == P.LOADING and topo.leaf_of(pe.device_id) != 0
+        ]
+        if loading:
+            break
+    assert loading, "no live-scale ever started"
+    dead_leaf = topo.leaf_of(loading[0].device_id)
+    doomed = {
+        pe.device_id for pe in rt.pool.all()
+        if pe.state == P.LOADING and topo.leaf_of(pe.device_id) == dead_leaf
+    }
+    n_doomed = len(doomed)
+    engine_devs = {pe.device_id for pe in rt.pool.all()}
+    # spares the in-event re-plan can land on (outside the dying leaf)
+    avail = [
+        d.id for d in topo.spares()
+        if topo.leaf_of(d.id) != dead_leaf and rt.net.device_ok(d.id)
+    ]
+    expected_replans = min(n_doomed, len(avail))
+    aborted_before = rt.stats.aborted_param_streams
+    cancelled_before = rt.stats.cancelled_scales
+    retired_before = rt.stats.retired
+
+    rt.net.fail_leaf(dead_leaf, now)
+
+    # handled entirely INSIDE the failure event: doomed engines gone from
+    # the pool, replacements loading on a surviving leaf — zero ticks later
+    assert rt.stats.aborted_param_streams == aborted_before + n_doomed
+    assert rt.stats.cancelled_scales == cancelled_before + n_doomed
+    assert rt.stats.failure_replans == expected_replans
+    assert not doomed & {pe.device_id for pe in rt.pool.all()}
+    repl = [
+        pe for pe in rt.pool.all()
+        if pe.state == P.LOADING and pe.device_id not in engine_devs
+    ]
+    assert len(repl) == expected_replans
+    assert all(topo.leaf_of(pe.device_id) != dead_leaf for pe in repl)
+    assert all(rt.net.device_ok(pe.device_id) for pe in repl)
+    # 0 per-flow-abort drains: nothing was retired through the drain path
+    assert rt.stats.retired == retired_before
+
+    # replaying the failure for an already-dead device is a no-op
+    before = (rt.stats.cancelled_scales, rt.stats.failure_replans,
+              rt.stats.aborted_param_streams)
+    rt.net.fail_device(next(iter(doomed)), now)
+    assert (rt.stats.cancelled_scales, rt.stats.failure_replans,
+            rt.stats.aborted_param_streams) == before
+
+    # a few ticks later the drain path has not rediscovered the dead
+    # engines, and the cluster still drains every request to completion
+    for _ in range(3):
+        now += 0.02
+        rt.tick(now)
+    assert rt.stats.cancelled_scales == cancelled_before + n_doomed
+    assert not doomed & {pe.device_id for pe in rt.pool.all()}
+    for _ in range(6000):
+        if rt.n_outstanding == 0:
+            break
+        now += 0.02
+        rt.tick(now)
+    assert rt.n_outstanding == 0
+    _, gapped = rt.router.handoff_report()
+    assert gapped == 0
 
 
 def test_failed_kv_migration_retargets_to_surviving_decode():
@@ -306,6 +408,56 @@ def test_failed_kv_source_reprefills_on_healthy_engine():
     assert rt.stats.remigrations < 100  # no abort/re-target livelock
     for r in rt.completed.values():
         assert len(r.out_tokens) == r.max_new_tokens
+
+
+def test_live_scale_aborting_at_start_leaks_no_loading_engine():
+    """A live-scale whose parameter flows abort synchronously at start (no
+    live route to the target — a fully severed uplink that killed no NIC,
+    invisible to device_ok) must not provision a stuck LOADING engine:
+    the abort fires BEFORE the engine would exist, so neither the drain
+    path nor the failure subscription could ever clean it up.  Holds in
+    both subscription modes (standalone and fleet-managed)."""
+    from repro.net import LEAF_UP
+
+    for subscribed in (True, False):
+        topo = tp.add_host_sources(
+            tp.make_cluster(2, 2, hosts_per_leaf=1, bw_gbps=100.0)
+        )
+        rt = _runtime(
+            topo=topo, n_prefill=1, n_decode=1,
+            failure_subscription=subscribed,
+        )
+        rt.tick(0.01)
+        # sever leaf 0's only uplink: cross-leaf flows have no route, but
+        # every NIC stays up, so no device is "dead"
+        rt.net.fail_link((LEAF_UP, 0, 0), 0.01)
+        assert rt.net.dead_devices() == set()
+        n_before = rt.n_engines
+        pe = rt._live_scale(P.PREFILL, 0.02)  # spares are all on leaf 1
+        assert pe is None
+        assert rt.n_engines == n_before
+        assert all(pe2.state != P.LOADING for pe2 in rt.pool.all())
+        # the target device was not left reserved either
+        assert [d.id for d in topo.spares() if d.leaf == 1]
+        rt.tick(0.03)  # the abort sweep finds nothing to tear down
+        assert rt.stats.cancelled_scales == 0
+
+
+def test_live_scale_rejects_plan_not_covering_target(monkeypatch):
+    """Degenerate-plan guard: if planning cannot cover the target (e.g. a
+    source-only chain), no engine is provisioned — a LOADING engine with
+    no inflow would otherwise 'load' instantly from the analytic
+    fallback's absurd rate."""
+    from repro.core import multicast as mc
+
+    rt = _runtime()
+    rt.tick(0.01)
+    empty = mc.MulticastPlan(chains=[], covered=[], gen_seconds=0.0,
+                             pruned_sources=[])
+    monkeypatch.setattr(mc, "plan_multicast", lambda *a, **k: empty)
+    n_before = rt.n_engines
+    assert rt._live_scale(P.PREFILL, 0.02) is None
+    assert rt.n_engines == n_before
 
 
 def test_scale_down_drains_and_frees_devices():

@@ -77,6 +77,27 @@ def test_seeded_run_is_deterministic_across_invocations():
     assert a.lines() == b.lines()
 
 
+def test_uniform_link_profiles_reproduce_realistic_golden():
+    """Heterogeneous-profile machinery, uniform values: expressing the
+    realistic run's uniform latency knobs as per-link ``LinkProfile``s (and
+    passing ZERO uniform knobs) must reproduce the realistic golden trace
+    bit-for-bit — the profile plumbing adds nothing until profiles actually
+    differ per link."""
+    from repro.net import LinkProfile
+
+    probe = sim.Simulator(sim.BLITZ, PROF, seed=0)  # enumerate link keys
+    profiles = {
+        key: LinkProfile(latency_s=2e-5, switch_latency_s=5e-6)
+        for key in probe.flowsim.net.links
+    }
+    log = FlowEventLog()
+    s = sim.Simulator(sim.BLITZ, PROF, seed=0, link_profiles=profiles)
+    s.flowsim.subscribe(log)
+    result = s.run(traces.burstgpt(duration=40.0, base_rate=5.0, seed=11))
+    assert result.kv_stream_bytes > 0.0
+    _assert_matches_golden("flow_events_realistic.txt", log.lines())
+
+
 def test_realistic_log_differs_from_legacy():
     """The latency + per-request configuration must actually change the
     event stream (otherwise the 'realistic' golden pins nothing new)."""

@@ -1,0 +1,308 @@
+"""Latency-aware multicast planning (tentpole of the planner/data-plane
+convergence PR): chain cost carries per-hop (link + switch) latency, source
+selection and target ordering re-rank on projected arrival, deep serial
+chains lose to wider plans when switching delay dominates, and the analytic
+``transfer_seconds`` agrees with FlowSim-realized completion.  Also pins the
+degenerate-chain and ``validate_plan`` sharded-slice fixes."""
+
+import math
+
+import pytest
+
+from repro.core import multicast as mc
+from repro.core import topology as tp
+from repro.net import FlowSim, MulticastExecution
+
+GB = 1e9
+MB_MODEL = int(2e8)  # 0.2 s at 8 Gbps (1 GB/s) — comparable to big latencies
+LINK_LAT = 0.01
+SWITCH_LAT = 0.05  # switching delay dominates: intra-leaf hop pays 0.07 s
+
+
+class _FlatLatency:
+    """Duck-typed planner latency view: uniform per-hop first-byte delay."""
+
+    has_latency = True
+
+    def __init__(self, hop_s: float):
+        self.hop_s = hop_s
+
+    def hop_latency(self, src: int, dst: int) -> float:
+        return 0.0 if src == dst else self.hop_s
+
+
+def _single_leaf_two_sources(n_devs=8, bw=8.0):
+    """One leaf, one device per scale-up domain, two model sources: the
+    bandwidth-only planner serializes every target behind ONE source (deep
+    chain) because freshly scaled targets are inserted at the queue head
+    and win max() ties."""
+    topo = tp.make_cluster(n_devs, 1, hosts_per_leaf=n_devs, bw_gbps=bw)
+    srcs = [0, 1]
+    for i in srcs:
+        topo.device(i).model = "m"
+        topo.device(i).role = tp.Role.DECODE  # egress free
+    tgts = [d.id for d in topo.spares()]
+    return topo, srcs, tgts
+
+
+def _chain_depth(plan: mc.MulticastPlan) -> int:
+    return max((len(c.edges) for c in plan.chains), default=0)
+
+
+def _realize(topo, plan, model_bytes, **flowsim_kw) -> float:
+    sim = FlowSim(topo, **flowsim_kw)
+    ex = MulticastExecution(plan, model_bytes)
+    ex.start(sim, 0.0)
+    sim.advance_to(1e6)
+    assert ex.done and not ex.aborted
+    return ex.done_at
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: deep chains lose to wide plans when switching delay dominates
+# ---------------------------------------------------------------------------
+
+
+def test_bandwidth_only_builds_deep_chain_latency_aware_splits():
+    topo, srcs, tgts = _single_leaf_two_sources()
+    plan_bw = mc.plan_multicast(topo, srcs, tgts, len(tgts))
+    assert _chain_depth(plan_bw) >= 4  # the PR-4 divergence scenario
+
+    sim = FlowSim(topo, link_latency_s=LINK_LAT, switch_latency_s=SWITCH_LAT)
+    plan_lat = mc.plan_multicast(
+        topo, srcs, tgts, len(tgts), net=sim, model_bytes=MB_MODEL
+    )
+    assert mc.validate_plan(topo, plan_lat) == []
+    assert sorted(plan_lat.covered) == sorted(plan_bw.covered) == sorted(tgts)
+    # both sources now head a chain and no chain is as deep as the serial one
+    assert len(plan_lat.chains) > len(plan_bw.chains)
+    assert _chain_depth(plan_lat) < _chain_depth(plan_bw)
+
+
+def test_latency_aware_plan_realizes_faster_than_bandwidth_only():
+    """Acceptance: on a switching-latency-dominated topology the
+    latency-aware plan's FlowSim-REALIZED completion beats the
+    bandwidth-only plan's, and the latency-aware ``transfer_seconds``
+    predicts its own realization within 1%."""
+    topo, srcs, tgts = _single_leaf_two_sources()
+    lat_kw = dict(link_latency_s=LINK_LAT, switch_latency_s=SWITCH_LAT)
+
+    plan_bw = mc.plan_multicast(topo, srcs, tgts, len(tgts))
+    sim_view = FlowSim(topo, **lat_kw)
+    plan_lat = mc.plan_multicast(
+        topo, srcs, tgts, len(tgts), net=sim_view, model_bytes=MB_MODEL
+    )
+
+    t_bw = _realize(topo, plan_bw, MB_MODEL, **lat_kw)
+    t_lat = _realize(topo, plan_lat, MB_MODEL, **lat_kw)
+    assert t_lat < t_bw * (1 - 1e-6), (t_lat, t_bw)
+    # the planner now predicts what the data plane charges (<= 1% drift);
+    # the bandwidth-only plan's analytic time misses its own latency cost
+    assert plan_lat.transfer_seconds(MB_MODEL) == pytest.approx(t_lat, rel=1e-2)
+    assert plan_bw.transfer_seconds(MB_MODEL) < t_bw
+
+
+def test_zero_latency_net_plans_bit_for_bit_like_bandwidth_only():
+    """A zero-latency FlowSim view must not perturb planning at all — the
+    configuration the legacy golden trace pins."""
+    topo, srcs, tgts = _single_leaf_two_sources()
+    plan_a = mc.plan_multicast(topo, srcs, tgts, len(tgts))
+    plan_b = mc.plan_multicast(
+        topo, srcs, tgts, len(tgts), net=FlowSim(topo), model_bytes=MB_MODEL
+    )
+
+    def shape(plan):
+        return [
+            [(e.src.device_ids, e.dst.device_ids, e.bw_gbps, e.sharded_ways,
+              e.intra_scaleup, e.latency_s) for e in c.edges]
+            for c in plan.chains
+        ]
+
+    assert shape(plan_a) == shape(plan_b)
+    assert plan_a.covered == plan_b.covered
+    assert plan_a.transfer_seconds(MB_MODEL) == plan_b.transfer_seconds(MB_MODEL)
+
+
+def test_latency_aware_source_selection_with_duck_typed_view():
+    """The planner only needs ``hop_latency`` — any stand-in works, and a
+    bigger hop delay pushes plans wider (more, shallower chains)."""
+    topo, srcs, tgts = _single_leaf_two_sources()
+    deep = mc.plan_multicast(
+        topo, srcs, tgts, len(tgts), net=_FlatLatency(1e-9), model_bytes=MB_MODEL
+    )
+    wide = mc.plan_multicast(
+        topo, srcs, tgts, len(tgts), net=_FlatLatency(0.1), model_bytes=MB_MODEL
+    )
+    assert _chain_depth(wide) <= _chain_depth(deep)
+    assert len(wide.chains) >= len(deep.chains)
+    assert all(e.latency_s == pytest.approx(0.1) for e in wide.all_edges())
+
+
+def test_latency_aware_target_order_defers_high_latency_targets():
+    """Fastest-first re-ranked on cost: a high-bandwidth target behind a
+    slow path no longer jumps the queue."""
+    topo = tp.make_cluster(4, 1, hosts_per_leaf=4, bw_gbps=8.0)
+    topo.device(0).model = "m"
+    topo.device(0).role = tp.Role.DECODE
+    topo.device(3).bw_gbps = 16.0  # fastest target, but behind a slow hop
+
+    class _SlowTo3:
+        has_latency = True
+
+        def hop_latency(self, src, dst):
+            return 0.5 if dst == 3 else 1e-3
+
+    tgts = [d.id for d in topo.spares()]
+    plan_bw = mc.plan_multicast(topo, [0], tgts, len(tgts))
+    first_bw = plan_bw.covered[0]
+    assert first_bw == 3  # bandwidth-only: fastest NIC goes first
+    plan_lat = mc.plan_multicast(
+        topo, [0], tgts, len(tgts), net=_SlowTo3(), model_bytes=MB_MODEL
+    )
+    assert plan_lat.covered[0] != 3
+    assert plan_lat.covered[-1] == 3  # deferred behind the low-latency ones
+
+
+# ---------------------------------------------------------------------------
+# Chain cost model (Fig. 13a + latency term)
+# ---------------------------------------------------------------------------
+
+
+def test_chain_transfer_seconds_includes_store_and_forward_latency():
+    n0 = mc.Node(device_ids=(0,), scaleup=0, leaf=0, agg_bw_gbps=8.0, is_source=True)
+    n1 = mc.Node(device_ids=(1,), scaleup=1, leaf=0, agg_bw_gbps=8.0)
+    n2 = mc.Node(device_ids=(2,), scaleup=2, leaf=0, agg_bw_gbps=8.0)
+    e1 = mc.Edge(src=n0, dst=n1, bw_gbps=8.0, sharded_ways=1, latency_s=0.07)
+    e2 = mc.Edge(src=n1, dst=n2, bw_gbps=8.0, sharded_ways=1, latency_s=0.07)
+    ch = mc.Chain(nodes=[n0, n1, n2], edges=[e1, e2])
+    assert ch.latency_seconds == pytest.approx(0.14)
+    # uniform hop bandwidth: closed form |M|/bottleneck + total latency
+    assert ch.transfer_seconds(int(GB)) == pytest.approx(1.0 + 0.14)
+    # heterogeneous hops: completion is the max over hop prefixes — a fast
+    # late hop does not hide the slow early hop's time
+    e2_fast = mc.Edge(src=n1, dst=n2, bw_gbps=80.0, sharded_ways=1, latency_s=0.07)
+    ch2 = mc.Chain(nodes=[n0, n1, n2], edges=[e1, e2_fast])
+    assert ch2.transfer_seconds(int(GB)) == pytest.approx(
+        max(0.07 + 1.0, 0.14 + 0.1)
+    )
+
+
+def test_chain_time_model_gains_latency_term():
+    base = mc.chain_time_model(int(GB), 8.0, 4)
+    assert mc.chain_time_model(int(GB), 8.0, 4, total_latency_s=0.25) == pytest.approx(
+        base + 0.25
+    )
+    sf = mc.chain_time_model(int(GB), 8.0, 4, pipelined=False, total_latency_s=0.25)
+    assert sf == pytest.approx(4 * base + 0.25)
+
+
+def test_degenerate_source_only_chain_is_explicit():
+    """Satellite: edge-less chains are a first-class degenerate case — no
+    bottleneck to rank on, zero transfer time — and ranking/division
+    callers must branch on ``is_degenerate``."""
+    n0 = mc.Node(device_ids=(0,), scaleup=0, leaf=0, agg_bw_gbps=8.0, is_source=True)
+    ch = mc.Chain(nodes=[n0], edges=[])
+    assert ch.is_degenerate
+    assert math.isinf(ch.bottleneck_gbps)
+    assert ch.transfer_seconds(int(GB)) == 0.0
+    assert ch.latency_seconds == 0.0
+    plan = mc.MulticastPlan(
+        chains=[ch], covered=[], gen_seconds=0.0, pruned_sources=[]
+    )
+    assert plan.transfer_seconds(int(GB)) == 0.0
+    assert plan.live_scale_nodes == []  # a degenerate chain has no tail hop
+    # a non-degenerate chain is not misclassified
+    n1 = mc.Node(device_ids=(1,), scaleup=1, leaf=0, agg_bw_gbps=8.0)
+    real = mc.Chain(
+        nodes=[n0, n1],
+        edges=[mc.Edge(src=n0, dst=n1, bw_gbps=8.0, sharded_ways=1)],
+    )
+    assert not real.is_degenerate and real.bottleneck_gbps == 8.0
+
+
+def test_interference_pruning_host_fallback_and_ablation_baseline():
+    """Line-1 pruning: all-busy sources seed the chain from the O(1) host
+    copy; ``allow_interference=True`` (the Fig. 8 ablation baseline) keeps
+    them and produces a plan validate_plan rejects."""
+    topo = tp.add_host_sources(tp.make_cluster(4, 1, hosts_per_leaf=4, bw_gbps=8.0))
+    for i in (0, 1):
+        topo.device(i).model = "m"
+        topo.device(i).role = tp.Role.PREFILL  # egress busy -> pruned
+    tgts = [d.id for d in topo.spares()]
+    pruned = mc.plan_multicast(topo, [0, 1], tgts, len(tgts))
+    assert pruned.pruned_sources == [0, 1]
+    assert pruned.chains[0].nodes[0].is_host
+    assert mc.validate_plan(topo, pruned) == []
+    ablation = mc.plan_multicast(topo, [0, 1], tgts, len(tgts),
+                                 allow_interference=True)
+    assert ablation.pruned_sources == []
+    assert not ablation.chains[0].nodes[0].is_host
+    assert mc.validate_plan(topo, ablation) != []  # collides with serving
+    # degraded cluster with no host tier: last resort keeps the busy sources
+    topo2 = tp.make_cluster(4, 1, hosts_per_leaf=4, bw_gbps=8.0)
+    for i in (0, 1):
+        topo2.device(i).model = "m"
+        topo2.device(i).role = tp.Role.PREFILL
+    tgts2 = [d.id for d in topo2.spares()]
+    last_resort = mc.plan_multicast(topo2, [0, 1], tgts2, len(tgts2))
+    assert sorted(last_resort.covered) == sorted(tgts2)
+
+
+# ---------------------------------------------------------------------------
+# validate_plan: sharded slice clamp (satellite bugfix)
+# ---------------------------------------------------------------------------
+
+
+def test_validate_plan_flags_and_clamps_oversharded_edge():
+    """``sharded_ways`` larger than an endpoint silently truncated the
+    device slices and under-counted link usage; now it is flagged AND the
+    accounting clamps to the pairs that actually transfer."""
+    topo = tp.make_cluster(2, 4, bw_gbps=100.0)
+    big = mc.Node(device_ids=(0, 1, 2, 3), scaleup=0, leaf=0,
+                  agg_bw_gbps=400.0, is_source=True)
+    small = mc.Node(device_ids=(4, 5), scaleup=1, leaf=0, agg_bw_gbps=200.0)
+    bad = mc.Edge(src=big, dst=small, bw_gbps=400.0, sharded_ways=4)
+    plan = mc.MulticastPlan(
+        chains=[mc.Chain(nodes=[big, small], edges=[bad])],
+        covered=[4, 5],
+        gen_seconds=0.0,
+        pruned_sources=[],
+    )
+    errors = mc.validate_plan(topo, plan)
+    assert any("sharded_ways 4 exceeds endpoint size 2" in e for e in errors)
+    # a well-formed plan with matched endpoints raises no such violation
+    ok = mc.Edge(src=big, dst=small, bw_gbps=200.0, sharded_ways=2)
+    plan_ok = mc.MulticastPlan(
+        chains=[mc.Chain(nodes=[big, small], edges=[ok])],
+        covered=[4, 5],
+        gen_seconds=0.0,
+        pruned_sources=[],
+    )
+    assert mc.validate_plan(topo, plan_ok) == []
+
+
+def test_validate_plan_clamped_usage_still_counts_collisions():
+    """The clamp keeps the accounting sound: the pairs that DO transfer
+    still collide with a second same-direction flow on the same device."""
+    topo = tp.make_cluster(2, 4, bw_gbps=100.0)
+    big = mc.Node(device_ids=(0, 1, 2, 3), scaleup=0, leaf=0,
+                  agg_bw_gbps=400.0, is_source=True)
+    small = mc.Node(device_ids=(4, 5), scaleup=1, leaf=0, agg_bw_gbps=200.0)
+    other = mc.Node(device_ids=(6,), scaleup=1, leaf=0, agg_bw_gbps=100.0)
+    oversharded = mc.Edge(src=big, dst=small, bw_gbps=400.0, sharded_ways=4)
+    reuse_egress = mc.Edge(src=mc.Node(device_ids=(0,), scaleup=0, leaf=0,
+                                       agg_bw_gbps=100.0, is_source=True),
+                           dst=other, bw_gbps=100.0, sharded_ways=1)
+    plan = mc.MulticastPlan(
+        chains=[
+            mc.Chain(nodes=[big, small], edges=[oversharded]),
+            mc.Chain(nodes=[reuse_egress.src, other], edges=[reuse_egress]),
+        ],
+        covered=[4, 5, 6],
+        gen_seconds=0.0,
+        pruned_sources=[],
+    )
+    errors = mc.validate_plan(topo, plan)
+    assert any("sharded_ways" in e for e in errors)
+    # device 0 feeds both the clamped edge (pair 0->4) and the second chain
+    assert any("device 0: 2 same-direction egress flows" in e for e in errors)

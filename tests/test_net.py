@@ -15,12 +15,14 @@ from repro.net import (
     FLOW_ABORTED,
     FLOW_COMPLETED,
     FLOW_STARTED,
+    LEAF_DOWN,
     LEAF_UP,
     LINK_FAILED,
     Flow,
     FlowEventLog,
     FlowKind,
     FlowSim,
+    LinkProfile,
     MulticastExecution,
 )
 
@@ -413,6 +415,188 @@ def test_multicast_chain_pays_cumulative_store_and_forward_latency():
 
 
 # ---------------------------------------------------------------------------
+# Heterogeneous per-link profiles (latency / switching / bandwidth overrides)
+# ---------------------------------------------------------------------------
+
+
+def test_link_profiles_per_hop_latency_sums_exactly():
+    """Profiles compose as a per-hop sum: each link contributes its own
+    propagation delay plus the switching delay of the element entering it."""
+    sim = FlowSim(
+        _flat_cluster(4),
+        link_profiles={
+            (DEV_OUT, 0): LinkProfile(latency_s=0.03),
+            (DEV_IN, 1): LinkProfile(latency_s=0.01, switch_latency_s=0.02),
+        },
+    )
+    assert sim.has_latency
+    # intra-leaf path 0->1: out(0.03) + in(0.01) + one switch into in (0.02)
+    assert sim.route_latency(0, 1) == pytest.approx(0.06)
+    # the reverse direction is untouched (profiles are per DIRECTED link)
+    assert sim.route_latency(1, 0) == 0.0
+    f = sim.start(Flow(FlowKind.KV_MIGRATION, 0, 1, GB), 0.0)
+    sim.advance_to(10.0)
+    assert f.finished_at == pytest.approx(1.06)
+
+
+def test_link_profiles_override_uniform_terms_and_bandwidth():
+    sim = FlowSim(
+        _flat_cluster(4),
+        link_latency_s=0.01,
+        switch_latency_s=0.005,
+        link_profiles={
+            (DEV_OUT, 0): LinkProfile(latency_s=0.1),  # slow long-haul egress
+            (DEV_IN, 1): LinkProfile(bandwidth_gbps=4.0),  # half-speed NIC gen
+        },
+    )
+    # 0.1 (profiled) + 0.01 (uniform in-link) + 0.005 (uniform switch)
+    assert sim.route_latency(0, 1) == pytest.approx(0.115)
+    f = sim.start(Flow(FlowKind.KV_MIGRATION, 0, 1, GB), 0.0)
+    sim.advance_to(10.0)
+    # bandwidth override binds: 1 GB at 0.5 GB/s after first-byte setup
+    assert f.finished_at == pytest.approx(0.115 + 2.0)
+
+
+def test_uniform_link_profiles_equal_uniform_knobs_bit_for_bit():
+    """Expressing the uniform knobs as per-link profiles changes nothing —
+    not even the floating point."""
+    topo = _flat_cluster(4, hosts_per_leaf=2)
+    base = FlowSim(topo, link_latency_s=0.01, switch_latency_s=0.005)
+    prof = FlowSim(
+        topo,
+        link_profiles={
+            key: LinkProfile(latency_s=0.01, switch_latency_s=0.005)
+            for key in base.net.links
+        },
+    )
+    for src, dst in ((0, 1), (0, 3), (2, 0)):
+        assert prof.route_latency(src, dst) == base.route_latency(src, dst)
+        assert prof.hop_latency(src, dst) == base.hop_latency(src, dst)
+        fa = base.start(Flow(FlowKind.KV_MIGRATION, src, dst, GB))
+        fb = prof.start(Flow(FlowKind.KV_MIGRATION, src, dst, GB))
+        base.advance_to(base.now + 10.0)
+        prof.advance_to(prof.now + 10.0)
+        assert fa.finished_at == fb.finished_at  # == exactly, not approx
+
+
+def test_raising_one_links_latency_never_speeds_any_path():
+    """Monotonicity: a single raised link slows exactly the paths crossing
+    it and leaves every other path untouched."""
+    topo = _flat_cluster(4, hosts_per_leaf=2)
+    base = FlowSim(topo, link_latency_s=0.01, switch_latency_s=0.005)
+    slow = FlowSim(
+        topo,
+        link_latency_s=0.01,
+        switch_latency_s=0.005,
+        link_profiles={(DEV_OUT, 0): LinkProfile(latency_s=0.2)},
+    )
+    for src in range(4):
+        for dst in range(4):
+            if src == dst:
+                continue
+            a = base.net.route_latency(src, dst)
+            b = slow.net.route_latency(src, dst)
+            assert b >= a - 1e-12
+            if src == 0:
+                assert b > a  # every path over the raised egress got slower
+            else:
+                assert b == a
+    f_slow = slow.start(Flow(FlowKind.COLD_START, 0, 3, GB), 0.0)
+    f_base = base.start(Flow(FlowKind.COLD_START, 0, 3, GB), 0.0)
+    slow.advance_to(10.0)
+    base.advance_to(10.0)
+    assert f_slow.finished_at > f_base.finished_at
+
+
+def test_link_profiles_planeless_key_and_unknown_key():
+    topo = _flat_cluster(4, hosts_per_leaf=2)
+    sim = FlowSim(
+        topo,
+        spine_planes=2,
+        link_profiles={(LEAF_UP, 0): LinkProfile(latency_s=0.05)},
+    )
+    for p in range(2):  # plane-less shorthand hit every plane
+        assert sim.net.link((LEAF_UP, 0, p)).prop_delay_s == 0.05
+    with pytest.raises(ValueError, match="matches no link"):
+        FlowSim(topo, link_profiles={("nope", 7): LinkProfile(latency_s=0.1)})
+    with pytest.raises(ValueError, match="must be >= 0"):
+        FlowSim(topo, link_profiles={(DEV_OUT, 0): LinkProfile(latency_s=-1.0)})
+
+
+def test_hop_latency_budgets_worst_live_spine_plane():
+    """hop_latency (the planner's + chain-charging view) returns the worst
+    live plane; a failed slow plane stops counting."""
+    topo = _flat_cluster(4, hosts_per_leaf=2)
+    sim = FlowSim(
+        topo,
+        spine_planes=2,
+        link_latency_s=0.01,
+        switch_latency_s=0.0,
+        link_profiles={(LEAF_UP, 0, 1): LinkProfile(latency_s=0.5)},
+    )
+    plane0 = 4 * 0.01  # out + up(p0) + down + in
+    plane1 = 3 * 0.01 + 0.5
+    assert sim.route_latency(0, 3) == pytest.approx(plane0)  # nominal plane 0
+    assert sim.hop_latency(0, 3) == pytest.approx(plane1)  # worst live plane
+    sim.net.link((LEAF_UP, 0, 1)).failed = True
+    assert sim.hop_latency(0, 3) == pytest.approx(plane0)  # slow plane dead
+    # every plane dead: fall back to the nominal plane-0 value (the flow
+    # will abort anyway — the budget just has to stay finite)
+    sim.net.link((LEAF_UP, 0, 0)).failed = True
+    assert sim.hop_latency(0, 3) == pytest.approx(plane0)
+    # intra-leaf hops are plane-independent
+    assert sim.hop_latency(0, 1) == pytest.approx(2 * 0.01)
+
+
+def test_chain_prefix_budgets_slow_spine_plane_no_causality_drift():
+    """Satellite: the store-and-forward prefix charged to downstream hops
+    must cover what the FlowSim ACTUALLY charges the upstream sharded
+    flows, whichever spine plane they land on.  A background flow pushes
+    hop 1 onto the slow plane 1; budgeting plane-0 latency (the old drift)
+    would let hop 2 finish before hop 1 — physically impossible for
+    store-and-forward.  Property: realized hop-k completion >= hop-(k-1)
+    completion + hop-k's own path latency."""
+    topo = tp.make_cluster(3, 2, hosts_per_leaf=1, bw_gbps=8.0)
+    sim = FlowSim(
+        topo,
+        spine_planes=2,
+        link_latency_s=0.01,
+        switch_latency_s=0.005,
+        link_profiles={(LEAF_UP, 0, 1): LinkProfile(latency_s=0.5)},
+    )
+    # background cross-leaf flow loads plane 0 of leaf 0's uplink, so the
+    # chain's first hop routes onto slow plane 1 (fewest active flows)
+    sim.start(Flow(FlowKind.SERVING, 1, 3, math.inf), 0.0)
+
+    def node(dev, su, leaf):
+        return mc.Node(device_ids=(dev,), scaleup=su, leaf=leaf, agg_bw_gbps=8.0)
+
+    n0 = mc.Node(device_ids=(0,), scaleup=0, leaf=0, agg_bw_gbps=8.0, is_source=True)
+    n1, n2 = node(2, 1, 1), node(4, 2, 2)
+    chain = mc.Chain(
+        nodes=[n0, n1, n2],
+        edges=[
+            mc.Edge(src=n0, dst=n1, bw_gbps=8.0, sharded_ways=1),
+            mc.Edge(src=n1, dst=n2, bw_gbps=8.0, sharded_ways=1),
+        ],
+    )
+    plan = mc.MulticastPlan(chains=[chain], covered=[2, 4], gen_seconds=0.0,
+                            pruned_sources=[])
+    ex = MulticastExecution(plan, int(GB))
+    ex.start(sim, 0.0)
+    hop1, hop2 = ex.edges[0].flows[0], ex.edges[1].flows[0]
+    assert any(l.key == (LEAF_UP, 0, 1) for l in hop1.path)  # on the slow plane
+    sim.advance_to(100.0)
+    assert ex.done
+    lat2 = sim.net.path_latency(hop2.path)
+    done1, done2 = ex.edges[0].done_at, ex.edges[1].done_at
+    assert done2 >= done1 + lat2 - 1e-9, (done1, done2, lat2)
+    # hop 1 really paid the slow plane, and hop 2's budget covered it
+    assert hop1.finished_at >= 0.5
+    assert hop2.extra_latency_s == pytest.approx(sim.hop_latency(0, 2))
+
+
+# ---------------------------------------------------------------------------
 # Event-subscription API (flow lifecycle + scenario mutations)
 # ---------------------------------------------------------------------------
 
@@ -704,3 +888,51 @@ if HAVE_HYPOTHESIS:
     @given(**LATENCY_STRATEGY)
     def test_latency_model_exact_and_monotone_fast(link_lat, switch_lat, gb, cross_leaf):
         _prop_latency_model_exact_and_monotone(link_lat, switch_lat, gb, cross_leaf)
+
+    SAF_STRATEGY = dict(
+        lats=st.lists(st.floats(0.0, 0.3), min_size=4, max_size=8),
+        gb=st.floats(0.05, 2.0),
+    )
+
+    def _prop_store_and_forward_arrivals_monotone(lats, gb):
+        """Uncontended deep chain over heterogeneous per-link latency
+        profiles: realized hop-k completion >= hop-(k-1) completion plus
+        hop-k's own path latency — downstream first bytes stay causally
+        behind their upstream store-and-forward stages."""
+        n = len(lats)
+        topo = _flat_cluster(n + 1, hosts_per_leaf=n + 1)
+        profiles = {
+            (DEV_IN, i + 1): LinkProfile(latency_s=lats[i]) for i in range(n)
+        }
+        sim = FlowSim(topo, link_latency_s=0.002, switch_latency_s=0.001,
+                      link_profiles=profiles)
+        nodes = [mc.Node(device_ids=(0,), scaleup=0, leaf=0,
+                         agg_bw_gbps=8.0, is_source=True)]
+        edges = []
+        for i in range(n):
+            nodes.append(mc.Node(device_ids=(i + 1,), scaleup=i + 1, leaf=0,
+                                 agg_bw_gbps=8.0))
+            edges.append(mc.Edge(src=nodes[-2], dst=nodes[-1], bw_gbps=8.0,
+                                 sharded_ways=1))
+        plan = mc.MulticastPlan(
+            chains=[mc.Chain(nodes=nodes, edges=edges)],
+            covered=list(range(1, n + 1)), gen_seconds=0.0, pruned_sources=[],
+        )
+        ex = MulticastExecution(plan, gb * GB)
+        ex.start(sim, 0.0)
+        sim.advance_to(1e6)
+        assert ex.done
+        for prev, cur in zip(ex.edges, ex.edges[1:]):
+            lat = sim.net.path_latency(cur.flows[0].path)
+            assert cur.done_at >= prev.done_at + lat - 1e-9
+
+    @pytest.mark.slow
+    @FULL
+    @given(**SAF_STRATEGY)
+    def test_store_and_forward_arrivals_monotone(lats, gb):
+        _prop_store_and_forward_arrivals_monotone(lats, gb)
+
+    @FAST
+    @given(**SAF_STRATEGY)
+    def test_store_and_forward_arrivals_monotone_fast(lats, gb):
+        _prop_store_and_forward_arrivals_monotone(lats, gb)
