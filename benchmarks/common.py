@@ -5,10 +5,12 @@ from __future__ import annotations
 import csv
 import json
 import os
+import subprocess
 import sys
 from typing import Iterable
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def smoke() -> bool:
@@ -38,6 +40,44 @@ def write_json(name: str, obj) -> str:
     path = result_path(name)
     with open(path, "w") as f:
         json.dump(obj, f, indent=1)
+    return path
+
+
+def git_sha() -> str:
+    """Current commit SHA, or "unknown" outside a git checkout — stamped
+    into every perf record so a regression can be bisected to a commit."""
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=REPO_ROOT,
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def bench_record(name: str, metrics: dict, *, seed: int | None = None,
+                 extra: dict | None = None) -> str:
+    """Write a ``BENCH_<name>.json`` perf record at the repo root.
+
+    The recorded baseline: a flat name->number metrics dict (a
+    ``MetricRegistry.flat()`` snapshot or hand-built numbers), stamped with
+    the commit SHA, the seed, and whether this was a smoke run — enough for
+    a later run to diff against.  Committed records ARE the perf baseline;
+    CI uploads fresh ones as artifacts for comparison."""
+    rec = {
+        "bench": name,
+        "schema": 1,
+        "git_sha": git_sha(),
+        "seed": seed,
+        "smoke": smoke(),
+        "metrics": {k: metrics[k] for k in sorted(metrics)},
+    }
+    if extra:
+        rec.update(extra)
+    path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, sort_keys=True)
+        f.write("\n")
     return path
 
 

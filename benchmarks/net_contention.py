@@ -24,7 +24,7 @@ bandwidth models could not express.  Two extras since the latency PR:
 
 from __future__ import annotations
 
-from benchmarks.common import markdown_table, smoke, write_csv
+from benchmarks.common import bench_record, markdown_table, smoke, write_csv
 from repro.core import multicast as mc
 from repro.core import topology as tp
 from repro.net import LEAF_DOWN, Flow, FlowKind, FlowSim, MulticastExecution
@@ -301,6 +301,21 @@ def main():
           "the failure via %d scheduler re-grant(s); doomed engines left "
           "to the runtime drain path: %d" %
           (t_recover, regrants, left_for_drain))
+    # recorded perf baseline: the realized data-plane completion times
+    metrics = {}
+    for name, t_scale, t_kv in rows:
+        key = name.split(" (")[0].replace(" ", "_").replace("+", "and")
+        if t_scale is not None:
+            metrics[f"{key}.scale_up_s"] = t_scale
+        if t_kv is not None:
+            metrics[f"{key}.kv_drain_s"] = t_kv
+    metrics.update({
+        "deep_vs_wide.bandwidth_only_s": t_bw,
+        "deep_vs_wide.latency_aware_s": t_lat,
+        "leaf_failure.recover_s": t_recover,
+        "leaf_failure.regrants": float(regrants),
+    })
+    bench_record("net_contention", metrics, seed=0)
     assert regrants >= 1, "failure subscription never re-granted"
     assert left_for_drain == 0, "runtime drain path handled the failure"
     print("\ncontention, degradation, oversubscription and latency all "

@@ -1,0 +1,91 @@
+"""Tracing overhead + the first recorded simulator perf baseline.
+
+Two questions:
+
+  1. what does enabling the span tracer cost?  (It must be cheap enough to
+     leave on for any investigation — and literally free when disabled,
+     which the golden-trace tests already pin behaviourally; this measures
+     the wall-clock side.)
+  2. what IS the seeded simulator's performance?  Until now the repo had
+     no recorded perf numbers at all; this writes ``BENCH_sim_baseline.json``
+     with the seeded run's TTFT/SLO/scale metrics so future PRs can diff.
+
+Run: ``PYTHONPATH=src python benchmarks/obs_overhead.py [--smoke]``
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import bench_record, markdown_table, smoke
+
+import repro.core.simulator as sim
+from repro.obs import MetricRegistry, Tracer, chrome_trace
+from repro.serving import traces
+
+SEED = 0
+
+
+def _run(duration: float, *, tracer=None, metrics=None):
+    s = sim.Simulator(sim.BLITZ, sim.profile_for("8b"), seed=SEED,
+                      tracer=tracer, metrics=metrics)
+    tr = traces.burstgpt(duration=duration, base_rate=4.0, seed=SEED + 11)
+    t0 = time.perf_counter()
+    res = s.run(tr)
+    return time.perf_counter() - t0, res
+
+
+def main() -> dict:
+    duration = 20.0 if smoke() else 60.0
+
+    _run(5.0)  # warm imports/JIT-free paths so the timed runs compare fairly
+    wall_off, res_off = _run(duration)
+    tracer = Tracer()
+    metrics = MetricRegistry()
+    wall_on, res_on = _run(duration, tracer=tracer, metrics=metrics)
+
+    assert res_on.p99_ttft() == res_off.p99_ttft(), (
+        "tracing must not change simulation results"
+    )
+    export = chrome_trace(list(tracer.spans))
+    overhead = (wall_on - wall_off) / wall_off if wall_off > 0 else 0.0
+
+    m = {
+        "wall_s_untraced": wall_off,
+        "wall_s_traced": wall_on,
+        "overhead_frac": overhead,
+        "spans": float(len(tracer.spans)),
+        "chrome_export_bytes": float(len(export)),
+        "requests": float(len(res_off.requests)),
+        "sim_duration_s": duration,
+    }
+    bench_record("obs_overhead", m, seed=SEED)
+
+    base = {
+        "ttft_p99_s": res_off.p99_ttft(),
+        "ttft_mean_s": res_off.mean_ttft(),
+        "tbt_p99_s": res_off.p99_tbt(),
+        "slo_attainment": res_off.slo_attainment(sim.profile_for("8b")),
+        "scale_events": float(res_off.scale_events),
+        "net_scale_bytes": res_off.net_scale_bytes,
+        "kv_stream_bytes": res_off.kv_stream_bytes,
+        "gpu_time_s": res_off.gpu_time_s,
+        "requests": float(len(res_off.requests)),
+        "sim_duration_s": duration,
+    }
+    base.update({f"registry.{k}": v for k, v in metrics.flat().items()})
+    bench_record("sim_baseline", base, seed=SEED)
+
+    print(markdown_table(
+        ["metric", "value"],
+        [["untraced wall (s)", f"{wall_off:.3f}"],
+         ["traced wall (s)", f"{wall_on:.3f}"],
+         ["overhead", f"{overhead * 100:.1f}%"],
+         ["spans", len(tracer.spans)],
+         ["p99 TTFT (s)", f"{res_off.p99_ttft():.4f}"]],
+    ))
+    return m
+
+
+if __name__ == "__main__":
+    main()

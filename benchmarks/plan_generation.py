@@ -9,7 +9,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import markdown_table, smoke, write_csv
+from benchmarks.common import bench_record, markdown_table, smoke, write_csv
 from repro.core import multicast as mc
 from repro.core import topology as tp
 from repro.core.zigzag import simulate_zigzag, solve_pipeline_ilp
@@ -63,6 +63,12 @@ def main():
     print(markdown_table(
         ["batches", "layers", "ILP (ms)", "ILP avg lat",
          "ILP-free (ms)", "ILP-free avg lat"], i_rows))
+    metrics = {f"plan_gen_ms.gpus{gpus}": ms for gpus, _, ms in p_rows}
+    metrics.update({
+        f"zigzag.b{b}_l{layers}.ilp_ms": ilp_ms
+        for b, layers, ilp_ms, *_ in i_rows
+    })
+    bench_record("plan_generation", metrics, seed=0)
     return p_rows, i_rows
 
 

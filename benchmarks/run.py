@@ -27,6 +27,7 @@ SUITES = [
     ("roofline", "§Roofline table from dry-run artifacts"),
     ("disagg_e2e", "disagg vs colocated on real engines"),
     ("maas_gpu_time", "MaaS fleet sharing vs static (Fig.18 claim)"),
+    ("obs_overhead", "tracing overhead + recorded sim perf baseline"),
 ]
 
 
@@ -40,6 +41,7 @@ def main() -> None:
         os.environ["BLITZ_SMOKE"] = "1"  # read by benchmarks.common.smoke()
 
     failures = []
+    suite_wall: dict[str, float] = {}
     for name, desc in SUITES:
         if args.only and args.only not in name:
             continue
@@ -48,13 +50,22 @@ def main() -> None:
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["main"])
             mod.main()
-            print(f"-- {name} ok in {time.perf_counter()-t0:.1f}s", flush=True)
+            suite_wall[name] = time.perf_counter() - t0
+            print(f"-- {name} ok in {suite_wall[name]:.1f}s", flush=True)
         except Exception:
             failures.append(name)
             traceback.print_exc()
             print(f"-- {name} FAILED", flush=True)
 
     print(f"\n{'='*78}")
+    if suite_wall and not args.only:
+        # per-suite wall seconds are themselves a tracked perf surface
+        from benchmarks.common import bench_record
+
+        bench_record(
+            "suite_times",
+            {f"{k}.wall_s": v for k, v in suite_wall.items()},
+        )
     if failures:
         print(f"{len(failures)} suite(s) failed: {failures}")
         raise SystemExit(1)

@@ -59,6 +59,7 @@ from repro.core.live_scaling import LiveSession
 from repro.core.parameter_pool import ParameterPool
 from repro.core.topology import Role, Topology, gbps_to_bytes_per_s
 from repro.net import Flow, FlowKind, FlowSim, MulticastExecution
+from repro.obs.trace import NULL_TRACER, NetEventBridge
 
 # ---------------------------------------------------------------------------
 # Model serving profile
@@ -289,6 +290,8 @@ class Simulator:
         link_profiles=None,
         per_request_kv: bool = True,
         seed: int = 0,
+        tracer=None,
+        metrics=None,
     ):
         self.sys = system
         self.prof = prof
@@ -343,6 +346,21 @@ class Simulator:
         self.kv_stream_bytes = 0.0  # per-request KV volume shipped over the net
         self.kv_re_prefills = 0  # KV source died -> re-prefilled elsewhere
 
+        # observability: the null tracer keeps every instrumented site a
+        # no-op, and the net bridge is only subscribed when tracing is on —
+        # a disabled run's flow-event stream is bit-for-bit unchanged
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics
+        self._bridge = None
+        if self.tracer.enabled:
+            self._bridge = NetEventBridge(self.tracer)
+            self.flowsim.subscribe(self._bridge)
+        self._req_spans: dict[int, object] = {}  # rid -> request root span
+        self._decode_spans: dict[int, object] = {}  # rid -> open decode span
+        self._scale_spans: dict[int, object] = {}  # iid -> instance-load span
+        self._scale_ops: dict[int, object] = {}  # op sid -> scale_op span
+        self._scale_pending: dict[int, set[int]] = {}  # op sid -> open iids
+
         cap_tps = self.prof.prefill_tps
         dec_tps = 32.0 / (self.prof.weight_pass_s + 32 * self.prof.kv_read_s(1024))
         n_accel = sum(1 for d in self.topo.devices if not d.is_host)
@@ -375,6 +393,42 @@ class Simulator:
         if t is not None:
             self.push(t, "net")
 
+    # -- tracing helpers ------------------------------------------------------
+    def _trace_decode_begin(self, rid: int, iid: int) -> None:
+        if self.tracer.enabled and rid not in self._decode_spans:
+            self._decode_spans[rid] = self.tracer.begin(
+                "decode", self.now, cat="compute",
+                parent=self._req_spans.get(rid), iid=iid)
+
+    def _trace_request_done(self, r: Request, t: float) -> None:
+        sp = self._decode_spans.pop(r.rid, None)
+        if sp is not None:
+            self.tracer.end(sp, t)
+        root = self._req_spans.pop(r.rid, None)
+        if root is not None:
+            self.tracer.end(root, t, tokens=r.output)
+
+    def _trace_scale_close(self, iid: int, t: float, *,
+                           aborted: bool = False) -> None:
+        """Close a loading instance's span; the batch scale_op span closes
+        when its last instance does."""
+        sp = self._scale_spans.pop(iid, None)
+        if sp is None:
+            return
+        if aborted:
+            self.tracer.end(sp, t, aborted=True)
+        else:
+            self.tracer.instant("serving", t, cat="scale", parent=sp)
+            self.tracer.end(sp, t)
+        pend = self._scale_pending.get(sp.parent)
+        if pend is not None:
+            pend.discard(iid)
+            if not pend:
+                del self._scale_pending[sp.parent]
+                op = self._scale_ops.pop(sp.parent, None)
+                if op is not None:
+                    self.tracer.end(op, t)
+
     # -- instance management --------------------------------------------------
     def _alloc_devices(self, n_devs: int) -> list[int] | None:
         spares = [d for d in self.topo.spares() if self.flowsim.device_ok(d.id)]
@@ -401,6 +455,7 @@ class Simulator:
 
     def _retire_instance(self, inst: Instance) -> None:
         inst.retired = True
+        self._trace_scale_close(inst.iid, self.now, aborted=True)
         self.pool.reclaim(self.prof.name, inst.device_ids)
         self.instances.pop(inst.iid, None)
         for i in inst.device_ids:
@@ -475,6 +530,13 @@ class Simulator:
             self.scale_seconds.append(delay)
             self.scale_events += 1
             inst = self._activate_instance(phase, devs, self.now + delay)
+            if self.tracer.enabled:
+                op = self.tracer.span(
+                    "scale_op", self.now, self.now + delay, cat="scale",
+                    track="scale", phase=phase, plane=self.sys.data_plane,
+                    iid=inst.iid)
+                self.tracer.instant("serving", self.now + delay, cat="scale",
+                                    parent=op)
             self.push(self.now + delay, "scale_done", inst.iid)
 
     def _do_scale_network(self, phase: str, alloc: list[list[int]]) -> None:
@@ -489,6 +551,13 @@ class Simulator:
         gpu_srcs, host = self.pool.sources(self.prof.name)
         tgt_ids = [i for devs in alloc for i in devs]
 
+        op = None
+        if self.tracer.enabled:
+            # decision -> plan -> hops -> layer arrivals -> serving, one tree
+            op = self.tracer.begin(
+                "scale_op", self.now, cat="scale", track="scale",
+                phase=phase, plane=self.sys.data_plane, n_instances=len(alloc))
+
         plan = None
         if self.sys.data_plane == "network_multicast":
             # ONE Algorithm-11 plan covers the whole batch (multi-chain);
@@ -502,6 +571,10 @@ class Simulator:
                 allow_interference=self.sys.allow_interference,
                 net=self.flowsim, model_bytes=pb,
             )
+            if op is not None:
+                self.tracer.instant(
+                    "plan", self.now, cat="scale", parent=op,
+                    chains=len(plan.chains), covered=len(plan.covered))
 
         insts: list[Instance] = []
         for devs in alloc:
@@ -513,6 +586,13 @@ class Simulator:
                 self._dev2inst[i] = inst
             insts.append(inst)
             self.scale_events += 1
+            if op is not None:
+                self._scale_spans[inst.iid] = self.tracer.begin(
+                    "instance_load", self.now, cat="load", parent=op,
+                    iid=inst.iid, devices=list(devs))
+        if op is not None:
+            self._scale_ops[op.sid] = op
+            self._scale_pending[op.sid] = {i.iid for i in insts}
         self.net_scale_bytes += pb * len(alloc)
 
         if plan is not None:
@@ -522,7 +602,13 @@ class Simulator:
             # instant/absurd rate: fall back to the analytic unicast time
             if not plan.chains or t_est <= 0.0 or not math.isfinite(t_est):
                 t_est = pb / gbps_to_bytes_per_s(min(self.pcie_gbps, self.net_gbps))
-            exec_ = MulticastExecution(plan, pb, on_node_ready=self._node_ready)
+            exec_ = MulticastExecution(
+                plan, pb, on_node_ready=self._node_ready,
+                tracer=self.tracer if op is not None else None,
+                parent_span=op,
+            )
+            if self._bridge is not None:
+                self._bridge.pin_all(exec_.flows, op)
             exec_.start(self.flowsim, self.now)
             uncovered = set(tgt_ids) - set(plan.covered)
             if self.sys.live and phase == "prefill":
@@ -545,14 +631,14 @@ class Simulator:
             src = gpu_srcs[0] if gpu_srcs else self._host_source_dev(host)
             uncovered = set()
             for inst in insts:
-                self.flowsim.start(
-                    Flow(
-                        FlowKind.COLD_START, src, inst.device_ids[0], float(pb),
-                        on_complete=self._unicast_done, payload=inst.iid,
-                        tag=f"naive:{inst.iid}",
-                    ),
-                    self.now,
+                f = Flow(
+                    FlowKind.COLD_START, src, inst.device_ids[0], float(pb),
+                    on_complete=self._unicast_done, payload=inst.iid,
+                    tag=f"naive:{inst.iid}",
                 )
+                if self._bridge is not None:
+                    self._bridge.pin(f, self._scale_spans.get(inst.iid))
+                self.flowsim.start(f, self.now)
                 # the flow lands on one device; siblings fill over scale-up
                 inst.pending_devs = {inst.device_ids[0]}
                 for i in inst.device_ids[1:]:
@@ -560,14 +646,14 @@ class Simulator:
 
         # targets the planner could not reach at all: PCIe host fallback
         for i in sorted(uncovered):
-            self.flowsim.start(
-                Flow(
-                    FlowKind.COLD_START, self._host_source_dev(host), i, float(pb),
-                    on_complete=lambda f, t: self._dev_ready(f.dst, t),
-                    tag=f"fallback:{i}",
-                ),
-                self.now,
+            f = Flow(
+                FlowKind.COLD_START, self._host_source_dev(host), i, float(pb),
+                on_complete=lambda f, t: self._dev_ready(f.dst, t),
+                tag=f"fallback:{i}",
             )
+            if self._bridge is not None:
+                self._bridge.pin(f, op)
+            self.flowsim.start(f, self.now)
         self._schedule_net()
 
     # -- scale-flow completion plumbing ---------------------------------------
@@ -593,6 +679,7 @@ class Simulator:
         self.scale_seconds.append(delay)
         inst.active_from = t + self.sys.control_plane_s
         inst.busy_until = inst.active_from
+        self._trace_scale_close(inst.iid, inst.active_from)
         self.push(inst.active_from, "scale_done", inst.iid)
 
     # -- serving: prefill ------------------------------------------------------
@@ -622,6 +709,22 @@ class Simulator:
         req: Request = inst.queue.popleft()
         service = req.prompt / (self.prof.prefill_tps * mult)
         inst.busy_until = self.now + service
+        if self.tracer.enabled:
+            root = self._req_spans.get(req.rid)
+            if root is not None:
+                # partition [arrival, prefill_done] exactly: waiting for the
+                # instance's parameters to arrive (load), then behind other
+                # requests (queue), then the forward pass itself (compute) —
+                # the three causes the attribution report splits TTFT into
+                b = min(max(inst.active_from, req.arrival), self.now)
+                if b - req.arrival > 1e-12:
+                    self.tracer.span("load_wait", req.arrival, b, cat="load",
+                                     parent=root, iid=inst.iid)
+                if self.now - b > 1e-12:
+                    self.tracer.span("queue", b, self.now, cat="queue",
+                                     parent=root, iid=inst.iid)
+                self.tracer.span("prefill", self.now, inst.busy_until,
+                                 cat="compute", parent=root, iid=inst.iid)
         self.push(inst.busy_until, "prefill_done", (inst.iid, req.rid))
 
     # -- serving: decode -------------------------------------------------------
@@ -645,6 +748,7 @@ class Simulator:
             was_empty = not inst.active_reqs
             inst.active_reqs[r.rid] = r
             inst.kv_tokens += r.prompt + r.output
+            self._trace_decode_begin(r.rid, inst.iid)
             if was_empty:
                 self.push(self.now, "decode_round", inst.iid)
 
@@ -688,16 +792,17 @@ class Simulator:
 
         size = float(request_kv_bytes(r.prompt, self.prof.kv_bytes_per_token))
         self.kv_stream_bytes += size
-        self.flowsim.start(
-            Flow(
-                FlowKind.SERVING, src, dst, size,
-                payload=(dinst.iid, r.rid),
-                on_complete=lambda f, t: self.push(t, "kv_landed", f.payload),
-                on_abort=lambda f, t: self.push(t, "kv_failed", f.payload),
-                tag=f"reqkv:{r.rid}",
-            ),
-            self.now,
+        f = Flow(
+            FlowKind.SERVING, src, dst, size,
+            payload=(dinst.iid, r.rid),
+            on_complete=lambda f, t: self.push(t, "kv_landed", f.payload),
+            on_abort=lambda f, t: self.push(t, "kv_failed", f.payload),
+            tag=f"reqkv:{r.rid}",
         )
+        if self._bridge is not None:
+            self._bridge.pin(f, self._req_spans.get(r.rid),
+                             name="kv_transfer", cat="migration")
+        self.flowsim.start(f, self.now)
         self._schedule_net()
 
     def _kv_landed(self, iid: int, rid: int) -> None:
@@ -708,6 +813,7 @@ class Simulator:
             return
         was_empty = not inst.active_reqs
         inst.active_reqs[rid] = r
+        self._trace_decode_begin(rid, inst.iid)
         if was_empty:
             self.push(self.now, "decode_round", inst.iid)
 
@@ -762,6 +868,8 @@ class Simulator:
                 inst.active_reqs.pop(r.rid, None)
                 inst.kv_tokens -= r.prompt + r.output
                 self.done.add(r.rid)
+                if self.tracer.enabled:
+                    self._trace_request_done(r, t_end)
         inst.busy_until = t_end
         self._admit_waiting(inst)
         if inst.active_reqs:
@@ -802,6 +910,17 @@ class Simulator:
         self._sync_serving_flows()
         if self._kv_net and self.waiting_decode:
             self._drain_waiting()  # recover from aborts / retired targets
+        if self.metrics is not None:
+            m = self.metrics
+            m.gauge("sim.instances.prefill").set(
+                len(self._live_instances("prefill")))
+            m.gauge("sim.instances.decode").set(
+                len(self._live_instances("decode")))
+            m.gauge("sim.waiting_decode").set(len(self.waiting_decode))
+            m.counter("sim.scale_events").set(self.scale_events)
+            m.counter("sim.net_scale_bytes").set(self.net_scale_bytes)
+            m.counter("sim.kv_stream_bytes").set(self.kv_stream_bytes)
+            m.snap(self.now)
         if not self.sys.autoscale:
             return
         pre = self._live_instances("prefill")
@@ -871,6 +990,11 @@ class Simulator:
             self.now = t
             if kind == "arrival":
                 r: Request = payload
+                if self.tracer.enabled and r.rid not in self._req_spans:
+                    self._req_spans[r.rid] = self.tracer.begin(
+                        "request", r.arrival, cat="request",
+                        track=f"req{r.rid % 8}", rid=r.rid,
+                        prompt=r.prompt, output=r.output)
                 inst = self._best_prefill()
                 if inst is None:
                     self.push(self.now + 0.05, "arrival", r)
@@ -886,6 +1010,12 @@ class Simulator:
                 inst = self.instances.get(iid)
                 r = self._reqs[rid]
                 r.prefill_done = self.now
+                if self.tracer.enabled:
+                    root = self._req_spans.get(rid)
+                    if root is not None and r.ttft is not None:
+                        root.attrs["ttft"] = r.ttft
+                if self.metrics is not None and r.ttft is not None:
+                    self.metrics.histogram("sim.ttft_s").observe(r.ttft)
                 if self._kv_net:
                     # the frozen KV pages live on the prefill device; they
                     # reach decode as a real flow, not an instant handoff
@@ -949,6 +1079,8 @@ class Simulator:
                 if self.now < horizon and len(self.done) < len(reqs):
                     self.push(self.now + self.monitor_dt, "monitor")
         self._account_gpu(self.now)
+        # unfinished requests / background flows must not leave dangling spans
+        self.tracer.close_open(self.now)
         return SimResult(
             system=self.sys.name,
             requests=reqs,

@@ -87,13 +87,28 @@ class FlowEventLog:
         sim.subscribe(log)
         ...  # run the scenario
         assert log.lines() == golden_file_lines
+
+    ``maxlen`` turns the log into a bounded ring buffer: only the newest
+    ``maxlen`` events are retained and ``dropped`` counts evictions — the
+    always-on production shape (keep the recent window, never grow without
+    bound).  The default (``maxlen=None``) keeps everything, which is what
+    the golden-trace tests rely on.
     """
 
-    def __init__(self):
-        self.events: list[NetEvent] = []
+    def __init__(self, maxlen: int | None = None):
+        from collections import deque
+
+        self.events: "deque[NetEvent]" = deque(maxlen=maxlen)
+        self.maxlen = maxlen
+        self.dropped = 0
 
     def __call__(self, ev: NetEvent) -> None:
+        if self.maxlen is not None and len(self.events) == self.maxlen:
+            self.dropped += 1
         self.events.append(ev)
+
+    def __len__(self) -> int:
+        return len(self.events)
 
     def lines(self) -> list[str]:
         return [ev.render() for ev in self.events]
@@ -103,3 +118,9 @@ class FlowEventLog:
 
     def count(self, kind: str) -> int:
         return sum(1 for ev in self.events if ev.kind == kind)
+
+    def iter_kinds(self, *kinds: str):
+        """Iterate retained events whose kind is in ``kinds`` (e.g.
+        ``log.iter_kinds(*FAILURE_KINDS)`` for the replan-worthy subset)."""
+        want = frozenset(kinds)
+        return (ev for ev in self.events if ev.kind in want)

@@ -52,12 +52,18 @@ class MulticastExecution:
         on_node_ready: Callable[[Node, float], None] | None = None,
         on_done: Callable[["MulticastExecution", float], None] | None = None,
         on_abort: Callable[["MulticastExecution", float], None] | None = None,
+        tracer=None,
+        parent_span=None,
     ):
         self.plan = plan
         self.model_bytes = model_bytes
         self.on_node_ready = on_node_ready
         self.on_done = on_done
         self.on_abort = on_abort
+        # duck-typed (repro.obs.Tracer-shaped) to keep repro.net free of an
+        # obs import; None / disabled tracers cost one attribute check
+        self.tracer = tracer if tracer is not None and tracer.enabled else None
+        self.parent_span = parent_span
         self.sim: FlowSim | None = None
         self.flows: list[Flow] = []
         self.edges: list[_EdgeState] = []
@@ -212,6 +218,11 @@ class MulticastExecution:
                 ready = max(st.done_at, prev_ready)
                 if node not in self.node_ready_at:
                     self.node_ready_at[node] = ready
+                    if self.tracer is not None:
+                        self.tracer.instant(
+                            "layer_arrival", max(ready, t), cat="scale",
+                            parent=self.parent_span, chain=ci,
+                            devices=list(node.device_ids))
                     if self.on_node_ready:
                         self.on_node_ready(node, max(ready, t))
                 prev_ready = self.node_ready_at[node]

@@ -1,0 +1,46 @@
+"""Cross-layer observability: span tracing, metric registry, exporters.
+
+``repro.obs`` is the one place simulation-time telemetry lives:
+
+  * :mod:`repro.obs.trace` — deterministic span tracer + the FlowSim
+    :class:`NetEventBridge`;
+  * :mod:`repro.obs.metrics` — counters/gauges/histograms behind one
+    :class:`MetricRegistry`, plus the :class:`StatBlock` base the serving
+    stats dataclasses share;
+  * :mod:`repro.obs.export` — Chrome trace-event JSON (Perfetto) and the
+    deterministic text form the golden tests pin;
+  * :mod:`repro.obs.report` — TTFT attribution CLI
+    (``python -m repro.obs.report``).
+
+Everything here is **off by default**: the :data:`NULL_TRACER` no-op is
+the universal default collaborator, so an un-instrumented run has zero
+behavioural or output difference.
+"""
+
+from repro.obs.export import chrome_trace, load_chrome, text_trace
+from repro.obs.metrics import (
+    DEFAULT_LATENCY_BUCKETS_S,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricRegistry,
+    StatBlock,
+)
+from repro.obs.trace import NULL_TRACER, NetEventBridge, NullTracer, Span, Tracer
+
+__all__ = [
+    "Span",
+    "Tracer",
+    "NullTracer",
+    "NULL_TRACER",
+    "NetEventBridge",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricRegistry",
+    "StatBlock",
+    "DEFAULT_LATENCY_BUCKETS_S",
+    "chrome_trace",
+    "text_trace",
+    "load_chrome",
+]

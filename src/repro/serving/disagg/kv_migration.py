@@ -114,12 +114,16 @@ class KVMigrationChannel:
     a standalone channel builds its own FlowSim, a ClusterRuntime passes
     the runtime-wide (or, under MaaS, fleet-wide) one."""
 
-    def __init__(self, topo: topo_mod.Topology | None = None, *, net: FlowSim | None = None):
+    def __init__(self, topo: topo_mod.Topology | None = None, *,
+                 net: FlowSim | None = None, tracer=None):
         if net is None:
             if topo is None:
                 raise ValueError("KVMigrationChannel needs a topology or a FlowSim")
             net = FlowSim(topo)
         self.net = net
+        # duck-typed (repro.obs.Tracer-shaped); None / disabled -> no spans
+        self.tracer = tracer if tracer is not None and tracer.enabled else None
+        self._spans: dict[int, object] = {}  # rid -> open migration span
         self._arrived: list[MigrationPayload] = []
         self._failed: list[MigrationPayload] = []
         self.transfer_log: list[float] = []  # realized seconds per landing
@@ -137,6 +141,11 @@ class KVMigrationChannel:
         self.net.advance_to(now)
         payload.sent_at = self.net.now  # before start: an instant (same-
         payload.landed_at = None  # device) landing fires _landed inside it
+        if self.tracer is not None:
+            self._spans[payload.rid] = self.tracer.begin(
+                "kv_migration", self.net.now, cat="migration",
+                track="migration", rid=payload.rid, src=payload.src_dev,
+                dst=payload.dst_dev, bytes=payload.total_bytes)
         self.net.start(
             Flow(
                 FlowKind.KV_MIGRATION,
@@ -153,12 +162,17 @@ class KVMigrationChannel:
     def _landed(self, flow: Flow, t: float) -> None:
         flow.payload.landed_at = t
         self.transfer_log.append(t - flow.payload.sent_at)
+        if self.tracer is not None:
+            self.tracer.end(self._spans.pop(flow.payload.rid, None), t)
         self._arrived.append(flow.payload)
 
     def _aborted(self, flow: Flow, t: float) -> None:
         # a link/NIC failure killed the transfer: the frozen pages are
         # still resident on the prefill side, so the caller re-targets
         # (take_failed) instead of losing the request
+        if self.tracer is not None:
+            self.tracer.end(self._spans.pop(flow.payload.rid, None), t,
+                            aborted=True)
         self._failed.append(flow.payload)
 
     def poll(self, now: float) -> list[MigrationPayload]:

@@ -36,6 +36,8 @@ from repro.core.autoscaler import Autoscaler, LoadSample, PolicyConfig
 from repro.core.live_scaling import LiveSession
 from repro.core.parameter_pool import ParameterPool
 from repro.net import FAILURE_KINDS, FlowSim, MulticastExecution, NetEvent
+from repro.obs.metrics import StatBlock
+from repro.obs.trace import NULL_TRACER
 from repro.serving.disagg import pools as P
 from repro.serving.disagg.kv_migration import KVMigrationChannel, make_payload
 from repro.serving.engine import InstanceEngine, ServeRequest
@@ -43,7 +45,7 @@ from repro.serving.router import Router
 
 
 @dataclasses.dataclass
-class RuntimeStats:
+class RuntimeStats(StatBlock):
     migrations: int = 0
     migrated_bytes: int = 0
     mutations: int = 0
@@ -89,6 +91,8 @@ class ClusterRuntime:
         allowed_devices: Iterable[int] | None = None,
         net: FlowSim | None = None,
         failure_subscription: bool = True,
+        tracer=None,
+        metrics=None,
         verbose: bool = False,
     ):
         self.cfg = cfg
@@ -132,8 +136,13 @@ class ClusterRuntime:
         #   aborted, awaiting the failure event that always follows
         if failure_subscription:
             self.net.subscribe(self._on_net_event)
+        # observability: the null tracer keeps every site a no-op; a bound
+        # metrics registry mirrors RuntimeStats under runtime.<model>.*
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics
+        self._scale_spans: dict[int, object] = {}  # loading dev -> open span
         self.pool = P.EnginePool(topo)
-        self.channel = KVMigrationChannel(net=self.net)
+        self.channel = KVMigrationChannel(net=self.net, tracer=self.tracer)
         self.router = Router()
         self._live_execs: dict[int, MulticastExecution] = {}  # target dev -> exec
         self._orphan_migrations: list = []  # failed KV payloads awaiting re-target
@@ -143,6 +152,8 @@ class ClusterRuntime:
             decode_capacity_tps=decode_capacity_tps,
         )
         self.stats = RuntimeStats()
+        if metrics is not None:
+            self.stats.bind(metrics, f"runtime.{cfg.name}")
         # frozen: policy-driven scaling suspended.  Set while the fleet
         # drains this runtime to zero (a parked model must not re-grow from
         # decaying monitor samples) and by the static-allocation baseline;
@@ -278,6 +289,7 @@ class ClusterRuntime:
             dev.model = None
             self.param_pool.reclaim(self.cfg.name, [pe.device_id])
             self.stats.cancelled_scales += 1
+            self._close_scale_span(pe.device_id, now, aborted=True)
             lost.append(pe.phase)
             self._log(
                 f"[fleet] cancelled doomed {pe.phase} live-scale on dead "
@@ -370,6 +382,17 @@ class ClusterRuntime:
         return len(self._sreqs) - len(self.completed)
 
     # -- scaling actions ----------------------------------------------------
+    def _close_scale_span(self, dev: int, t: float, *,
+                          aborted: bool = False) -> None:
+        sp = self._scale_spans.pop(dev, None)
+        if sp is None:
+            return
+        if aborted:
+            self.tracer.end(sp, t, aborted=True)
+        else:
+            self.tracer.instant("serving", t, cat="scale", parent=sp)
+            self.tracer.end(sp, t)
+
     def _live_scale(
         self, phase: str, now: float, *, target: int | None = None
     ) -> P.PooledEngine | None:
@@ -407,10 +430,20 @@ class ClusterRuntime:
             # analytic estimate with no bytes ever arriving
             return None
         t_est = max(plan.transfer_seconds(self.model_bytes), 1e-6)
+        span = None
+        if self.tracer.enabled:
+            span = self.tracer.begin(
+                "scale_op", now, cat="scale", track="scale",
+                phase=phase, device=target, model=self.cfg.name)
+            self.tracer.instant("plan", now, cat="scale", parent=span,
+                                chains=len(plan.chains))
+            self._scale_spans[target] = span
         exec_ = MulticastExecution(
             plan,
             self.model_bytes,
             on_abort=lambda e, t, dev=target: self._param_stream_aborted(dev, t),
+            tracer=self.tracer if span is not None else None,
+            parent_span=span,
         )
         exec_.start(self.net, now)
         if exec_.aborted:
@@ -420,6 +453,7 @@ class ClusterRuntime:
             # engine exists, so neither the drain path nor the failure
             # subscription could ever clean it up: don't provision at all.
             self._aborted_scales.discard(target)
+            self._close_scale_span(target, now, aborted=True)
             return None
         has_inflow = bool(exec_.flows_into(target))
         session = LiveSession(
@@ -518,6 +552,7 @@ class ClusterRuntime:
                 exec_.cancel(self.net)
             self.param_pool.reclaim(self.cfg.name, [pe.device_id])
             self.stats.retired += 1
+            self._close_scale_span(pe.device_id, now, aborted=True)
             self._log(f"[scale] retired {pe.phase} dev {pe.device_id}")
 
         # 1. advance live-scaling sessions from realized flow progress
@@ -527,6 +562,7 @@ class ClusterRuntime:
                 if pe.engine.can_serve_alone():
                     self.pool.activate(pe)
                     self._live_execs.pop(pe.device_id, None)
+                    self._close_scale_span(pe.device_id, now)
                     self.param_pool.deploy(self.cfg.name, [pe.device_id])
                     self._log(f"[scale] dev {pe.device_id} fully loaded -> active {pe.phase}")
 

@@ -33,6 +33,8 @@ import math
 from repro.core import topology as topo_mod
 from repro.core.parameter_pool import ParameterPool
 from repro.net import FAILURE_KINDS, FlowSim, NetEvent
+from repro.obs.metrics import MetricRegistry, StatBlock
+from repro.obs.trace import NULL_TRACER
 from repro.serving.disagg import pools as P
 from repro.serving.disagg.runtime import ClusterRuntime
 from repro.serving.maas import tenant as T
@@ -61,7 +63,7 @@ class FleetPolicy:
 
 
 @dataclasses.dataclass
-class FleetStats:
+class FleetStats(StatBlock):
     cold_starts: int = 0
     scale_to_zero_events: int = 0
     preemptions: int = 0
@@ -81,6 +83,8 @@ class FleetScheduler:
         *,
         policy: FleetPolicy | None = None,
         net: FlowSim | None = None,
+        tracer=None,
+        metrics: MetricRegistry | None = None,
         verbose: bool = False,
     ):
         self.topo = topo
@@ -92,7 +96,12 @@ class FleetScheduler:
         # drive placement affinity)
         self.net = net if net is not None else FlowSim(topo)
         self.tenants: dict[str, Tenant] = {}
-        self.stats = FleetStats()
+        # ONE registry for the whole fleet: FleetStats plus every tenant's
+        # RuntimeStats/TenantStats mirror into it under fleet./runtime.<m>./
+        # tenant.<m>. prefixes — one queryable, JSON-able surface
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics if metrics is not None else MetricRegistry()
+        self.stats = FleetStats().bind(self.metrics, "fleet")
         self.verbose = verbose
         self._last_tick: float | None = None
         # first-class failure subscription: the scheduler learns of a
@@ -160,9 +169,12 @@ class FleetScheduler:
             # and drives teardown/re-grant itself — a per-runtime
             # subscription would double-handle every failure
             failure_subscription=False,
+            tracer=self.tracer,
+            metrics=self.metrics,
             **runtime_kw,
         )
         t = Tenant(cfg.name, rt, slo_class=slo_class)
+        t.stats.bind(self.metrics, f"tenant.{cfg.name}")
         self.tenants[cfg.name] = t
         return t
 
@@ -234,6 +246,10 @@ class FleetScheduler:
                 if granted:
                     t.runtime.acquire_devices(granted)
                     self.stats.grants += len(granted)
+                    if self.tracer.enabled:
+                        self.tracer.instant(
+                            "grant", now, cat="fleet", track="fleet",
+                            model=t.name, devices=list(granted))
                     self._log(f"[fleet] {t.name}: granted devices {granted}")
                     if self._needs_cold_start(t):
                         host_starts_before = t.runtime.stats.cold_starts_from_host
@@ -244,6 +260,11 @@ class FleetScheduler:
                             )
                             t.state = T.ACTIVE
                             self.stats.cold_starts += 1
+                            if self.tracer.enabled:
+                                self.tracer.instant(
+                                    "cold_start", now, cat="fleet",
+                                    track="fleet", model=t.name,
+                                    from_host=from_host)
                             self._log(
                                 f"[fleet] {t.name}: cold start ({started} "
                                 f"engine(s), source="
@@ -315,6 +336,11 @@ class FleetScheduler:
                 rt.acquire_devices([dev])
                 if rt.restart_scale(phase, now, target=dev) is not None:
                     self.stats.failure_regrants += 1
+                    if self.tracer.enabled:
+                        self.tracer.instant(
+                            "failure_regrant", now, cat="fleet",
+                            track="fleet", model=t.name, device=dev,
+                            phase=phase)
                     self._log(
                         f"[fleet] {t.name}: failure re-grant -> {phase} "
                         f"live-scale on dev {dev}"

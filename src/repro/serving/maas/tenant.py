@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.obs.metrics import StatBlock
 from repro.serving.disagg.runtime import ClusterRuntime
 
 ACTIVE = "active"  # has engines (possibly some draining) and may serve
@@ -30,7 +31,7 @@ CLASS_WEIGHTS = {LATENCY: 4.0, THROUGHPUT: 1.0}
 
 
 @dataclasses.dataclass
-class TenantStats:
+class TenantStats(StatBlock):
     # cold starts live on runtime.stats (the runtime performs them); here is
     # only what the FLEET decides about this tenant
     scaled_to_zero: int = 0

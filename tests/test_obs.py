@@ -1,0 +1,412 @@
+"""Observability subsystem: metric registry, span tracer, exporters, report.
+
+The load-bearing properties:
+
+  * a seeded, traced simulator run exports a byte-identical Chrome trace
+    every time (golden-pinned, like the flow-event log);
+  * enabling the tracer changes NOTHING about the simulation itself — the
+    flow-event stream is bit-for-bit the untraced one;
+  * every request's TTFT is fully attributed to named spans
+    (load_wait/queue/prefill partition the window exactly);
+  * span trees are well-formed: every span closed, children inside their
+    parent's interval;
+  * the stats dataclasses (RuntimeStats/FleetStats/TenantStats) share the
+    StatBlock surface and mirror into a bound MetricRegistry.
+
+Regenerate the chrome golden with ``REGEN_GOLDEN=1 pytest tests/test_obs.py``.
+"""
+
+import json
+import os
+import pathlib
+
+import pytest
+
+from repro.net import FlowEventLog
+from repro.net.events import FLOW_COMPLETED, FLOW_STARTED, NetEvent
+from repro.obs import (
+    DEFAULT_LATENCY_BUCKETS_S,
+    MetricRegistry,
+    NULL_TRACER,
+    NullTracer,
+    StatBlock,
+    Tracer,
+    chrome_trace,
+    load_chrome,
+    text_trace,
+)
+from repro.obs.report import attribute_requests, run_traced_sim, summarize
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+
+
+# ---------------------------------------------------------------------------
+# metric registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_counters_gauges_histograms():
+    reg = MetricRegistry()
+    reg.counter("a").inc()
+    reg.counter("a").inc(2.5)
+    reg.gauge("g").set(7)
+    h = reg.histogram("lat")
+    for v in (0.0005, 0.003, 0.003, 2.0, 1e9):
+        h.observe(v)
+    assert reg.counter("a").value == 3.5
+    assert reg.gauge("g").value == 7.0
+    assert h.count == 5 and h.counts[-1] == 1  # 1e9 -> overflow bucket
+    assert h.counts[0] == 1  # 0.0005 <= first bound
+    assert abs(h.mean - (0.0005 + 0.003 + 0.003 + 2.0 + 1e9) / 5) < 1e-6
+
+    snap = reg.snapshot()
+    assert snap["counters"] == {"a": 3.5}
+    assert snap["gauges"] == {"g": 7.0}
+    assert snap["histograms"]["lat"]["count"] == 5
+    flat = reg.flat()
+    assert flat["a"] == 3.5 and flat["lat.count"] == 5.0
+    json.dumps(snap)  # must be JSON-serializable as-is
+
+    reg.snap(1.5)
+    reg.snap(2.5)
+    assert [t for t, _ in reg.series] == [1.5, 2.5]
+
+
+def test_registry_cells_are_get_or_create():
+    reg = MetricRegistry()
+    assert reg.counter("x") is reg.counter("x")
+    assert reg.histogram("h") is reg.histogram("h")
+    assert reg.histogram("h").bounds == tuple(sorted(DEFAULT_LATENCY_BUCKETS_S))
+
+
+def test_statblock_unifies_stats_dataclasses():
+    from repro.serving.disagg.runtime import RuntimeStats
+    from repro.serving.maas.fleet import FleetStats
+    from repro.serving.maas.tenant import TenantStats
+
+    for cls in (RuntimeStats, FleetStats, TenantStats):
+        assert issubclass(cls, StatBlock)
+        d = cls().as_dict()
+        assert d and all(isinstance(v, (int, float)) for v in d.values())
+
+    reg = MetricRegistry()
+    st = RuntimeStats().bind(reg, "runtime.m")
+    st.migrations += 3
+    st.migrated_bytes += 1024
+    assert reg.counter("runtime.m.migrations").value == 3.0
+    assert reg.counter("runtime.m.migrated_bytes").value == 1024.0
+    # unbound blocks stay plain dataclasses
+    plain = RuntimeStats()
+    plain.migrations += 1
+    assert plain.as_dict()["migrations"] == 1
+
+
+# ---------------------------------------------------------------------------
+# flow event log ring buffer
+# ---------------------------------------------------------------------------
+
+
+def _mk_event(kind, t):
+    return NetEvent(kind=kind, t=t)
+
+
+def test_flow_event_log_ring_buffer():
+    log = FlowEventLog(maxlen=3)
+    for i in range(5):
+        log(_mk_event(FLOW_STARTED, float(i)))
+    assert len(log) == 3 and log.dropped == 2
+    assert [e.t for e in log.events] == [2.0, 3.0, 4.0]  # newest retained
+    # unbounded default: nothing dropped
+    full = FlowEventLog()
+    for i in range(5):
+        full(_mk_event(FLOW_STARTED, float(i)))
+    assert len(full) == 5 and full.dropped == 0 and full.maxlen is None
+
+
+def test_flow_event_log_iter_kinds():
+    log = FlowEventLog()
+    log(_mk_event(FLOW_STARTED, 0.0))
+    log(_mk_event(FLOW_COMPLETED, 1.0))
+    log(_mk_event(FLOW_STARTED, 2.0))
+    assert [e.t for e in log.iter_kinds(FLOW_STARTED)] == [0.0, 2.0]
+    assert [e.t for e in log.iter_kinds(FLOW_COMPLETED)] == [1.0]
+    assert list(log.iter_kinds("nope")) == []
+
+
+# ---------------------------------------------------------------------------
+# tracer primitives
+# ---------------------------------------------------------------------------
+
+
+def test_null_tracer_is_inert():
+    assert not NULL_TRACER.enabled
+    s = NULL_TRACER.begin("x", 1.0, cat="c")
+    NULL_TRACER.end(s, 2.0)
+    assert NULL_TRACER.instant("y", 1.0).sid == -1
+    assert NULL_TRACER.close_open(5.0) == 0
+    assert isinstance(NULL_TRACER, NullTracer)
+
+
+def test_tracer_spans_and_parenting():
+    tr = Tracer()
+    root = tr.begin("root", 1.0, cat="r", track="lane")
+    child = tr.begin("kid", 2.0, parent=root)
+    assert child.parent == root.sid
+    assert child.track == "lane"  # inherited from parent
+    tr.end(child, 3.0)
+    tr.end(root, 4.0)
+    tr.end(root, 9.0)  # re-close is a no-op
+    assert root.t1 == 4.0
+    inst = tr.instant("mark", 5.0)
+    assert inst.t0 == inst.t1 == 5.0
+    closed = tr.span("late", 6.0, 7.0, cat="x")
+    assert closed.duration == 1.0
+    assert [s.sid for s in tr.spans] == [0, 1, 2, 3]  # emission-ordered ids
+    assert tr.by_name("kid") == [child]
+    assert tr.children_of(root) == [child]
+
+
+def test_close_open_sweeps_dangling_spans():
+    tr = Tracer()
+    tr.begin("a", 0.0)
+    b = tr.begin("b", 1.0)
+    tr.end(b, 2.0)
+    assert len(tr.open_spans()) == 1
+    assert tr.close_open(5.0) == 1
+    assert tr.open_spans() == [] and tr.spans[0].t1 == 5.0
+
+
+def test_end_clamps_backwards_time():
+    tr = Tracer()
+    s = tr.begin("s", 10.0)
+    tr.end(s, 9.0)
+    assert s.t1 == 10.0
+
+
+# ---------------------------------------------------------------------------
+# traced simulator run: determinism, neutrality, well-formedness
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def traced_run():
+    tracer, result = run_traced_sim(duration=10.0, rate=4.0, seed=0)
+    return tracer, result
+
+
+def test_traced_run_spans_are_well_formed(traced_run):
+    tracer, _ = traced_run
+    spans = tracer.spans
+    assert spans, "traced run produced no spans"
+    by_sid = {s.sid: s for s in spans}
+    assert len(by_sid) == len(spans)  # unique ids
+    for s in spans:
+        assert s.closed, f"span {s.sid} ({s.name}) left open"
+        assert s.t1 >= s.t0
+        if s.parent is not None:
+            p = by_sid[s.parent]
+            assert p.t0 - 1e-9 <= s.t0 and s.t1 <= p.t1 + 1e-9, (
+                f"span {s.sid} ({s.name}) escapes parent {p.sid} ({p.name})"
+            )
+    # the instrumented layers all show up
+    names = {s.name for s in spans}
+    assert {"request", "prefill", "decode", "scale_op", "plan",
+            "layer_arrival", "serving"} <= names
+    assert any(s.name.startswith("flow:") or s.name == "kv_transfer"
+               for s in spans)
+
+
+def test_chrome_trace_is_byte_deterministic(traced_run):
+    tracer, _ = traced_run
+    again, _ = run_traced_sim(duration=10.0, rate=4.0, seed=0)
+    a = chrome_trace(list(tracer.spans))
+    b = chrome_trace(list(again.spans))
+    assert a == b
+    assert text_trace(list(tracer.spans)) == text_trace(list(again.spans))
+
+
+def test_chrome_trace_matches_golden(traced_run):
+    tracer, _ = traced_run
+    got = chrome_trace(list(tracer.spans))
+    path = GOLDEN_DIR / "chrome_trace.json"
+    if os.environ.get("REGEN_GOLDEN"):
+        GOLDEN_DIR.mkdir(exist_ok=True)
+        path.write_text(got + "\n")
+    want = path.read_text().rstrip("\n")
+    assert got == want, "chrome trace drifted from golden (REGEN_GOLDEN=1 to accept)"
+
+
+def test_tracing_does_not_change_the_simulation():
+    import repro.core.simulator as sim
+    from repro.serving import traces
+
+    def lines(tracer):
+        s = sim.Simulator(sim.BLITZ, sim.profile_for("8b"), seed=0,
+                          tracer=tracer)
+        log = FlowEventLog()
+        s.flowsim.subscribe(log)
+        res = s.run(traces.burstgpt(duration=10.0, base_rate=4.0, seed=7))
+        return log.lines(), res.p99_ttft()
+
+    (off_lines, off_p99) = lines(None)
+    (on_lines, on_p99) = lines(Tracer())
+    assert off_lines == on_lines
+    assert off_p99 == on_p99
+
+
+def test_default_simulator_has_null_tracer():
+    import repro.core.simulator as sim
+
+    s = sim.Simulator(sim.BLITZ, sim.profile_for("8b"), seed=0)
+    assert s.tracer is NULL_TRACER
+    assert s._bridge is None  # no subscriber registered when disabled
+
+
+# ---------------------------------------------------------------------------
+# exporters
+# ---------------------------------------------------------------------------
+
+
+def test_chrome_trace_roundtrip(traced_run):
+    tracer, _ = traced_run
+    spans = list(tracer.spans)
+    loaded = load_chrome(chrome_trace(spans))
+    assert len(loaded) == len(spans)
+    by_sid = {s.sid: s for s in loaded}
+    for s in spans:
+        l = by_sid[s.sid]
+        assert l.name == s.name and l.cat == (s.cat or "default")
+        assert l.parent == s.parent
+        assert abs(l.t0 - s.t0) < 1e-6 and abs((l.t1 or l.t0) - s.t1) < 1e-6
+    # attribution computed from the exported file matches in-process
+    assert len(attribute_requests(loaded)) == len(attribute_requests(spans))
+
+
+def test_chrome_trace_is_valid_perfetto_shape(traced_run):
+    tracer, _ = traced_run
+    doc = json.loads(chrome_trace(list(tracer.spans)))
+    assert doc["displayTimeUnit"] == "ms"
+    evs = doc["traceEvents"]
+    assert all(e["ph"] in ("M", "X", "i") for e in evs)
+    for e in evs:
+        if e["ph"] == "X":
+            assert e["dur"] > 0 and e["ts"] >= 0
+        if e["ph"] == "i":
+            assert e["s"] == "t"
+
+
+# ---------------------------------------------------------------------------
+# TTFT attribution (the acceptance headline)
+# ---------------------------------------------------------------------------
+
+
+def test_ttft_fully_attributed_for_every_request(traced_run):
+    tracer, result = traced_run
+    reqs = attribute_requests(list(tracer.spans))
+    finished = [r for r in result.requests if r.ttft is not None]
+    assert len(reqs) == len(finished) > 0
+    for r in reqs:
+        assert r.frac >= 0.95, (
+            f"rid {r.rid}: only {r.frac:.1%} of TTFT attributed "
+            f"({r.by_cause})"
+        )
+
+
+def test_attribution_summary_shape(traced_run):
+    tracer, _ = traced_run
+    summary = summarize(attribute_requests(list(tracer.spans)))
+    assert summary["n_requests"] > 0
+    assert summary["ttft_p99_s"] >= summary["ttft_p50_s"] > 0
+    assert summary["min_attribution_frac"] >= 0.95
+    assert set(summary["tail_by_cause_s"]) == {"queue", "load", "compute"}
+    assert summary["tail_dominant_cause"] in ("queue", "load", "compute")
+    shares = summary["tail_share_by_cause"]
+    assert abs(sum(shares.values()) - 1.0) < 1e-6
+
+
+def test_report_cli_gate():
+    from repro.obs import report as report_mod
+
+    summary = report_mod.main(
+        ["--sim", "--duration", "8", "--rate", "3",
+         "--min-attribution", "0.95"]
+    )
+    assert summary["n_requests"] > 0
+
+
+# ---------------------------------------------------------------------------
+# migration + runtime instrumentation
+# ---------------------------------------------------------------------------
+
+
+def test_kv_migration_channel_emits_spans():
+    from repro.core import topology as tp
+    from repro.net import FlowSim
+    from repro.serving.disagg.kv_migration import KVMigrationChannel, MigrationPayload
+
+    topo = tp.make_cluster(2, 4)
+    net = FlowSim(topo)
+    tr = Tracer()
+    ch = KVMigrationChannel(net=net, tracer=tr)
+    p = MigrationPayload(
+        rid=1, request=None, first_token=0, cache_one=None, prompt_len=8,
+        total_bytes=10**9, n_pages=1, src_dev=0, dst_dev=4,
+        tokens_at_freeze=[0],
+    )
+    ch.start(p, 0.0)
+    net.advance_to(10.0)
+    assert ch.poll(10.0) == [p]
+    (span,) = tr.by_name("kv_migration")
+    assert span.cat == "migration" and span.closed
+    assert span.attrs["rid"] == 1 and span.duration > 0
+
+
+# ---------------------------------------------------------------------------
+# property tests (hypothesis optional, like the rest of the repo)
+# ---------------------------------------------------------------------------
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - optional dev dependency
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.floats(min_value=0.0, max_value=100.0), max_size=60))
+    def test_histogram_counts_partition_observations(values):
+        from repro.obs.metrics import Histogram
+
+        h = Histogram("h", (0.5, 1.0, 5.0, 20.0))
+        for v in values:
+            h.observe(v)
+        assert sum(h.counts) == h.count == len(values)
+        assert abs(h.total - sum(values)) < 1e-6
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.tuples(st.floats(min_value=0.0, max_value=10.0),
+                              st.floats(min_value=0.0, max_value=10.0)),
+                    min_size=1, max_size=30))
+    def test_span_trees_always_close_and_nest(intervals):
+        """Arbitrary nested begin/end sequences: after close_open, every
+        span is closed and children lie inside their parents."""
+        tr = Tracer()
+        stack = []
+        t = 0.0
+        for a, b in intervals:
+            t += a
+            parent = stack[-1] if stack else None
+            stack.append(tr.begin("s", t, parent=parent))
+            if b < 5.0 and stack:  # sometimes close the innermost
+                t += b
+                tr.end(stack.pop(), t)
+        tr.close_open(t + 1.0)
+        by_sid = {s.sid: s for s in tr.spans}
+        for s in tr.spans:
+            assert s.closed
+            if s.parent is not None:
+                p = by_sid[s.parent]
+                assert p.t0 <= s.t0 and s.t1 <= p.t1
