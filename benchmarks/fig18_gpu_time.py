@@ -9,6 +9,7 @@ import numpy as np
 
 from benchmarks.common import calibrated_trace, markdown_table, smoke, write_csv
 from repro.core import simulator as sim
+from repro.obs.ledger import DEVICE_STATES
 
 
 def run(duration=None):
@@ -32,6 +33,9 @@ def run(duration=None):
             round(r.mean_tbt(), 5), round(r.p99_tbt(), 5),
             round(r.gpu_time_s, 1), round(r.slo_attainment(prof), 4),
             r.scale_events,
+            # per-state GPU-time attribution (appended AFTER scale_events so
+            # the positional assertions below keep their indices)
+            *(round(r.device_seconds.get(s, 0.0), 1) for s in DEVICE_STATES),
         ])
     return rows
 
@@ -40,10 +44,21 @@ def main():
     rows = run()
     write_csv("fig18_gpu_time.csv",
               ["system", "mean_ttft", "p99_ttft", "mean_tbt", "p99_tbt",
-               "gpu_time_s", "slo_attainment", "scale_events"], rows)
+               "gpu_time_s", "slo_attainment", "scale_events",
+               *(f"gpu_{s}_s" for s in DEVICE_STATES)], rows)
+    # stacked per-state view: one row per (system, state) with its share of
+    # the system's total — the plot-ready form of the utilization ledger
+    stacked = []
+    for r in rows:
+        total = r[5] or 1.0
+        for i, s in enumerate(DEVICE_STATES):
+            stacked.append([r[0], s, r[8 + i], round(r[8 + i] / total, 4)])
+    write_csv("fig18_gpu_state_breakdown.csv",
+              ["system", "state", "device_seconds", "frac"], stacked)
     print(markdown_table(
         ["system", "mean TTFT", "p99 TTFT", "mean TBT", "p99 TBT",
-         "GPU-time(s)", "SLO", "scales"], rows))
+         "GPU-time(s)", "SLO", "scales",
+         *(s.replace("_", " ") for s in DEVICE_STATES)], rows))
     if smoke():
         return rows
     by = {r[0]: r for r in rows}

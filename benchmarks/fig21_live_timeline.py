@@ -36,7 +36,10 @@ def run():
     # throughput timeline: 1 base instance + scaling instances' contribution
     ts = np.linspace(0, max(t_blitz, t_allcache) * 1.3, 20 if smoke() else 80)
     rows = []
+    states = []  # per-timestep device-state attribution (ledger semantics)
     L = prof.n_layers
+    n_scale_devs = n_new * prof.devices_per_instance
+    base_devs = prof.devices_per_instance
     for t in ts:
         k = min(L, int(L * t / max(t_blitz, 1e-9)))
         # live chains: tails serve cooperatively as layers land
@@ -46,13 +49,34 @@ def run():
             blitz_tp = 1.0 + n_new
         allcache_tp = 1.0 + (n_new if t >= t_allcache else 0.0)
         rows.append([round(float(t), 3), round(blitz_tp, 3), round(allcache_tp, 3)])
-    return rows, t_blitz, t_allcache, plan
+        # device-state split, analytic counterpart of the simulator ledger:
+        # blitz tails serve with the fraction of layers already landed
+        # (serving) and stall on the remainder; allcache devices are pure
+        # loading_params until the PCIe load finishes (stop-the-world)
+        f = min(k / L, 1.0) if t < t_blitz else 1.0
+        states.append([
+            round(float(t), 3), "blitz",
+            round(base_devs + n_scale_devs * f, 2),     # serving_prefill
+            round(n_scale_devs * (1.0 - f), 2),         # stalled_waiting_layers
+            0.0,                                        # loading_params
+        ])
+        done_ac = t >= t_allcache
+        states.append([
+            round(float(t), 3), "allcache",
+            round(base_devs + (n_scale_devs if done_ac else 0), 2),
+            0.0,
+            round(0 if done_ac else n_scale_devs, 2),
+        ])
+    return rows, states, t_blitz, t_allcache, plan
 
 
 def main():
-    rows, t_blitz, t_allcache, plan = run()
+    rows, states, t_blitz, t_allcache, plan = run()
     write_csv("fig21_live_timeline.csv",
               ["t_s", "blitz_rel_throughput", "allcache_rel_throughput"], rows)
+    write_csv("fig21_device_states.csv",
+              ["t_s", "system", "serving_prefill", "stalled_waiting_layers",
+               "loading_params"], states)
     print(f"chains: {len(plan.chains)}, blitz scale {t_blitz:.2f}s vs "
           f"allcache {t_allcache:.2f}s")
     print(markdown_table(["t(s)", "blitz", "allcache"], rows[::10]))

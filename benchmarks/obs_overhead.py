@@ -73,6 +73,10 @@ def main() -> dict:
         "requests": float(len(res_off.requests)),
         "sim_duration_s": duration,
     }
+    # the ledger's exclusive-state split of gpu_time_s: a regression in any
+    # single state (e.g. loading_params growing) gates even when the total
+    # happens to cancel out
+    base.update({f"gpu_s.{k}": v for k, v in res_off.device_seconds.items()})
     base.update({f"registry.{k}": v for k, v in metrics.flat().items()})
     bench_record("sim_baseline", base, seed=SEED)
 

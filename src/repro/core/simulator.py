@@ -59,6 +59,7 @@ from repro.core.live_scaling import LiveSession
 from repro.core.parameter_pool import ParameterPool
 from repro.core.topology import Role, Topology, gbps_to_bytes_per_s
 from repro.net import Flow, FlowKind, FlowSim, MulticastExecution
+from repro.obs.ledger import DEVICE_STATES, DeviceTimeLedger
 from repro.obs.trace import NULL_TRACER, NetEventBridge
 
 # ---------------------------------------------------------------------------
@@ -216,7 +217,7 @@ def delay_system(delay_s: float) -> SystemConfig:
 class SimResult:
     system: str
     requests: list[Request]
-    gpu_time_s: float  # integral of (active devices) dt
+    gpu_time_s: float  # integral of (allocated devices) dt — the ledger total
     host_cache_peak_bytes: dict[int, int]  # per host
     scale_events: int
     scale_seconds: list[float]  # data-plane durations
@@ -224,6 +225,9 @@ class SimResult:
     timeline: list[tuple[float, int, int]]  # (t, n_prefill, n_decode)
     kv_stream_bytes: float = 0.0  # per-request KV serving bytes over the net
     kv_re_prefills: int = 0  # requests re-prefilled after their KV source died
+    # exclusive-state attribution of gpu_time_s (repro.obs.ledger.DEVICE_STATES
+    # order); conservation is exact: sum(device_seconds.values()) == gpu_time_s
+    device_seconds: dict[str, float] = dataclasses.field(default_factory=dict)
 
     def ttfts(self) -> np.ndarray:
         return np.array([r.ttft for r in self.requests if r.ttft is not None])
@@ -292,6 +296,8 @@ class Simulator:
         seed: int = 0,
         tracer=None,
         metrics=None,
+        slo_monitor=None,
+        link_ledger=None,
     ):
         self.sys = system
         self.prof = prof
@@ -338,7 +344,10 @@ class Simulator:
         self.scale_seconds: list[float] = []
         self.net_scale_bytes = 0.0
         self.scale_events = 0
-        self.gpu_time = 0.0
+        # the device-time ledger IS the GPU-time accounting: every accounted
+        # interval lands in exactly one state, and gpu_time_s is defined as
+        # the ledger total — attribution conserves by construction
+        self.ledger = DeviceTimeLedger()
         self._last_gpu_t = 0.0
         self.timeline: list[tuple[float, int, int]] = []
         self._serving_flows: dict[int, Flow] = {}  # prefill iid -> KV stream
@@ -351,6 +360,14 @@ class Simulator:
         # a disabled run's flow-event stream is bit-for-bit unchanged
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self.metrics = metrics
+        # optional streaming SLO monitor (repro.obs.slo.SLOMonitor): fed at
+        # prefill completion (TTFT) and request completion (TBTs)
+        self.slo = slo_monitor
+        # optional link-time ledger: attaches to the FlowSim so every byte
+        # the run moves is attributed to its flow-kind group per link
+        self.link_ledger = link_ledger
+        if link_ledger is not None:
+            self.flowsim.attach_ledger(link_ledger)
         self._bridge = None
         if self.tracer.enabled:
             self._bridge = NetEventBridge(self.tracer)
@@ -870,6 +887,9 @@ class Simulator:
                 self.done.add(r.rid)
                 if self.tracer.enabled:
                     self._trace_request_done(r, t_end)
+                if self.slo is not None:
+                    for tbt in r.tbts():
+                        self.slo.observe_tbt("sim", t_end, tbt)
         inst.busy_until = t_end
         self._admit_waiting(inst)
         if inst.active_reqs:
@@ -951,11 +971,40 @@ class Simulator:
                 self._retire_instance(idle[0])
 
     def _account_gpu(self, t_new: float) -> None:
+        # Partition [self._last_gpu_t, t_new] per instance into exclusive
+        # ledger states.  Instance state is piecewise-constant over the
+        # interval (transitions coincide with popped events), except
+        # active_from, which may fall inside it — split there.
         dt = t_new - self._last_gpu_t
-        if dt > 0:
-            n_devs = sum(len(i.device_ids) for i in self.instances.values())
-            self.gpu_time += dt * n_devs
-            self._last_gpu_t = t_new
+        if dt <= 0:
+            return
+        t0 = self._last_gpu_t
+        led = self.ledger
+        for inst in self.instances.values():
+            n = len(inst.device_ids)
+            af = inst.active_from
+            if af >= t_new:
+                load, active = dt, 0.0
+            elif af <= t0:
+                load, active = 0.0, dt
+            else:
+                load, active = af - t0, t_new - af
+            if load > 0.0:
+                # loading with work already queued = the stall BLITZSCALE's
+                # live loading exists to hide
+                led.accrue(
+                    "stalled_waiting_layers" if (inst.queue or inst.active_reqs)
+                    else "loading_params", load * n)
+            if active > 0.0:
+                a0 = max(t0, af)
+                busy = min(max(inst.busy_until - a0, 0.0), active)
+                if busy > 0.0:
+                    led.accrue("serving_prefill" if inst.phase == "prefill"
+                               else "serving_decode", busy * n)
+                idle = active - busy
+                if idle > 0.0:
+                    led.accrue("allocated_idle", idle * n)
+        self._last_gpu_t = t_new
 
     # -- main loop ---------------------------------------------------------------
     def run(self, trace: list[tuple[float, int, int]]) -> SimResult:
@@ -1016,6 +1065,8 @@ class Simulator:
                         root.attrs["ttft"] = r.ttft
                 if self.metrics is not None and r.ttft is not None:
                     self.metrics.histogram("sim.ttft_s").observe(r.ttft)
+                if self.slo is not None and r.ttft is not None:
+                    self.slo.observe_ttft("sim", self.now, r.ttft)
                 if self._kv_net:
                     # the frozen KV pages live on the prefill device; they
                     # reach decode as a real flow, not an instant handoff
@@ -1084,7 +1135,8 @@ class Simulator:
         return SimResult(
             system=self.sys.name,
             requests=reqs,
-            gpu_time_s=self.gpu_time,
+            gpu_time_s=self.ledger.total(),
+            device_seconds=self.ledger.breakdown(),
             host_cache_peak_bytes=dict(self.host_cache_peak),
             scale_events=self.scale_events,
             scale_seconds=self.scale_seconds,

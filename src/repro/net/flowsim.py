@@ -119,6 +119,11 @@ class FlowSim:
         self.completed_count = 0
         self.aborted_count = 0
         self._subscribers: list[Callable[[NetEvent], None]] = []
+        # optional link-time ledger (repro.obs.ledger.LinkLedger): accrues
+        # per-link bytes/busy-seconds by flow kind on every integration
+        # step.  None (the default) keeps the data plane untouched — no
+        # events, no extra arithmetic, golden traces bit-for-bit.
+        self.ledger = None
 
     # -- event subscription --------------------------------------------------
     def subscribe(self, cb: Callable[[NetEvent], None]) -> Callable:
@@ -130,6 +135,13 @@ class FlowSim:
     def unsubscribe(self, cb: Callable[[NetEvent], None]) -> None:
         if cb in self._subscribers:
             self._subscribers.remove(cb)
+
+    def attach_ledger(self, ledger):
+        """Attach a :class:`repro.obs.ledger.LinkLedger` (duck-typed:
+        anything with ``accrue_flow(flow, moved_bytes, dt)`` and
+        ``note_time(now)``).  Returns the ledger for chaining."""
+        self.ledger = ledger
+        return ledger
 
     def _emit(self, kind: str, **kw) -> None:
         if not self._subscribers:
@@ -289,12 +301,15 @@ class FlowSim:
                     dt_evt = min(dt_evt, f.remaining / f.rate)
             step = min(now - self.now, dt_evt)
             if step > 0.0:
+                led = self.ledger
                 for f in self.flows:
                     if f.active_at is None and f.rate > 0.0:
                         moved = f.rate * step
                         f.transferred += moved
                         if not f.background:
                             f.remaining -= moved
+                        if led is not None:
+                            led.accrue_flow(f, moved, step)
                 self.now += step
             activated = self._activate_pending()
             done = [
@@ -322,6 +337,8 @@ class FlowSim:
         if now > self.now:
             self.now = now
         self._activate_pending()
+        if self.ledger is not None:
+            self.ledger.note_time(self.now)
         return completed
 
     def next_event_time(self) -> float | None:

@@ -7,10 +7,17 @@
   * :mod:`repro.obs.metrics` — counters/gauges/histograms behind one
     :class:`MetricRegistry`, plus the :class:`StatBlock` base the serving
     stats dataclasses share;
+  * :mod:`repro.obs.ledger` — the fleet utilization ledgers: exclusive-
+    state device-second accounting (with an exact conservation invariant)
+    and per-link busy-time attribution by flow kind;
+  * :mod:`repro.obs.slo` — streaming SLO monitor: P² quantiles, burn-rate
+    windows, ``fleet_health()``;
   * :mod:`repro.obs.export` — Chrome trace-event JSON (Perfetto) and the
     deterministic text form the golden tests pin;
   * :mod:`repro.obs.report` — TTFT attribution CLI
-    (``python -m repro.obs.report``).
+    (``python -m repro.obs.report``);
+  * :mod:`repro.obs.perfdiff` — BENCH_*.json perf-regression differ
+    (``python -m repro.obs.perfdiff``), the CI perf gate.
 
 Everything here is **off by default**: the :data:`NULL_TRACER` no-op is
 the universal default collaborator, so an un-instrumented run has zero
@@ -18,6 +25,7 @@ behavioural or output difference.
 """
 
 from repro.obs.export import chrome_trace, load_chrome, text_trace
+from repro.obs.ledger import DEVICE_STATES, DeviceTimeLedger, LinkLedger
 from repro.obs.metrics import (
     DEFAULT_LATENCY_BUCKETS_S,
     Counter,
@@ -26,6 +34,7 @@ from repro.obs.metrics import (
     MetricRegistry,
     StatBlock,
 )
+from repro.obs.slo import P2Quantile, SLOMonitor
 from repro.obs.trace import NULL_TRACER, NetEventBridge, NullTracer, Span, Tracer
 
 __all__ = [
@@ -40,6 +49,11 @@ __all__ = [
     "MetricRegistry",
     "StatBlock",
     "DEFAULT_LATENCY_BUCKETS_S",
+    "DEVICE_STATES",
+    "DeviceTimeLedger",
+    "LinkLedger",
+    "P2Quantile",
+    "SLOMonitor",
     "chrome_trace",
     "text_trace",
     "load_chrome",

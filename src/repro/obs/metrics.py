@@ -28,7 +28,8 @@ a time axis without a separate time-series store.
 from __future__ import annotations
 
 import dataclasses
-from bisect import bisect_right
+from bisect import bisect_left
+from collections import deque
 from typing import Iterable
 
 __all__ = [
@@ -93,7 +94,9 @@ class Histogram:
         self.count = 0
 
     def observe(self, v: float) -> None:
-        self.counts[bisect_right(self.bounds, v) if v > self.bounds[0] else 0] += 1
+        # bisect_left keeps an observation exactly equal to bounds[i] in
+        # bucket i — the documented "at or below bounds[i]" semantics
+        self.counts[bisect_left(self.bounds, v)] += 1
         self.total += v
         self.count += 1
 
@@ -111,13 +114,21 @@ class Histogram:
 
 
 class MetricRegistry:
-    """Named counters/gauges/histograms + timestamped snapshot series."""
+    """Named counters/gauges/histograms + timestamped snapshot series.
 
-    def __init__(self):
+    ``series_maxlen`` bounds the snapshot series as a ring buffer (oldest
+    snapshots evicted, ``series_dropped`` counts them) — the same contract
+    as ``FlowEventLog``'s ring-buffer mode, so a long-horizon simulation's
+    periodic ``snap()`` cannot grow memory without limit.  ``None`` (the
+    default) keeps the unbounded behaviour."""
+
+    def __init__(self, *, series_maxlen: int | None = None):
         self.counters: dict[str, Counter] = {}
         self.gauges: dict[str, Gauge] = {}
         self.histograms: dict[str, Histogram] = {}
-        self.series: list[tuple[float, dict]] = []
+        self.series: deque[tuple[float, dict]] = deque(maxlen=series_maxlen)
+        self.series_maxlen = series_maxlen
+        self.series_dropped = 0
 
     # -- cells ---------------------------------------------------------------
     def counter(self, name: str) -> Counter:
@@ -168,7 +179,11 @@ class MetricRegistry:
 
     def snap(self, t: float) -> None:
         """Append a timestamped snapshot to ``series`` (the periodic-
-        snapshot hook a monitor loop calls)."""
+        snapshot hook a monitor loop calls).  At ``series_maxlen`` the
+        oldest snapshot is evicted and counted in ``series_dropped``."""
+        if (self.series_maxlen is not None
+                and len(self.series) == self.series_maxlen):
+            self.series_dropped += 1
         self.series.append((float(t), self.snapshot()))
 
 

@@ -93,6 +93,7 @@ class ClusterRuntime:
         failure_subscription: bool = True,
         tracer=None,
         metrics=None,
+        ledger=None,
         verbose: bool = False,
     ):
         self.cfg = cfg
@@ -140,6 +141,11 @@ class ClusterRuntime:
         # metrics registry mirrors RuntimeStats under runtime.<model>.*
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self.metrics = metrics
+        # device-time ledger (repro.obs.ledger.DeviceTimeLedger): every tick
+        # attributes the elapsed interval to exclusive engine states, owner-
+        # keyed by model name so a multi-tenant fleet can split the bill
+        self.ledger = ledger
+        self._last_ledger_t: float | None = None
         self._scale_spans: dict[int, object] = {}  # loading dev -> open span
         self.pool = P.EnginePool(topo)
         self.channel = KVMigrationChannel(net=self.net, tracer=self.tracer)
@@ -532,9 +538,47 @@ class ClusterRuntime:
         self.stats.scale_downs += 1
         self._log(f"[scale] draining {phase} dev {victim.device_id}")
 
+    def _accrue_ledger(self, now: float) -> None:
+        """Attribute the device-time elapsed since the previous tick to
+        exclusive ledger states.  Runs at the top of ``tick()``, BEFORE this
+        tick's transitions, so each engine is billed for the state it held
+        over the interval: DRAINING -> draining; LOADING with work queued
+        against it -> stalled_waiting_layers (the stall live loading exists
+        to hide), else loading_params; ACTIVE -> serving_<phase>, or
+        allocated_idle when nothing is queued, active, or in flight."""
+        last = self._last_ledger_t
+        self._last_ledger_t = now
+        if last is None:
+            return
+        dt = now - last
+        if dt <= 0:
+            return
+        led = self.ledger
+        owner = self.cfg.name
+        waiting = bool(self.router.queue)
+        for pe in self.pool.all():
+            if pe.state == P.DRAINING:
+                state = "draining"
+            elif pe.state == P.LOADING:
+                state = (
+                    "stalled_waiting_layers"
+                    if waiting or pe.pending or pe.inflight
+                    else "loading_params"
+                )
+            elif pe.idle():
+                state = "allocated_idle"
+            else:
+                state = (
+                    "serving_prefill" if pe.phase == P.PREFILL
+                    else "serving_decode"
+                )
+            led.accrue(state, dt, owner=owner)
+
     # -- main loop ----------------------------------------------------------
     def tick(self, now: float) -> list[int]:
         """One runtime iteration; returns rids completed this tick."""
+        if self.ledger is not None:
+            self._accrue_ledger(now)
         # 0. advance the shared network to now (flow completions fire here),
         #    then retire drained instances; free their devices (idle() holds
         #    retirement while KV migrations are still in flight toward one)

@@ -85,6 +85,8 @@ class FleetScheduler:
         net: FlowSim | None = None,
         tracer=None,
         metrics: MetricRegistry | None = None,
+        ledger=None,
+        slo_monitor=None,
         verbose: bool = False,
     ):
         self.topo = topo
@@ -102,6 +104,13 @@ class FleetScheduler:
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self.metrics = metrics if metrics is not None else MetricRegistry()
         self.stats = FleetStats().bind(self.metrics, "fleet")
+        # fleet-wide device-time ledger: tenant runtimes accrue their own
+        # engine states into it (owner = model name); the fleet adds only
+        # the granted-but-unconsumed FREE devices, so nothing double-bills
+        self.ledger = ledger
+        # streaming SLO monitor: fed per-tenant from completed requests each
+        # tick; fleet_health() is its observe-only summary surface
+        self.slo_monitor = slo_monitor
         self.verbose = verbose
         self._last_tick: float | None = None
         # first-class failure subscription: the scheduler learns of a
@@ -171,6 +180,7 @@ class FleetScheduler:
             failure_subscription=False,
             tracer=self.tracer,
             metrics=self.metrics,
+            ledger=self.ledger,
             **runtime_kw,
         )
         t = Tenant(cfg.name, rt, slo_class=slo_class)
@@ -201,6 +211,14 @@ class FleetScheduler:
             held = t.runtime.n_engines * dt
             t.stats.gpu_seconds += held
             self.stats.gpu_seconds += held
+        if self.ledger is not None and dt > 0:
+            # granted devices no engine occupies yet are still billed to the
+            # tenant holding the grant (engine-held time is accrued by each
+            # runtime itself inside tick())
+            for t in self.tenants.values():
+                for dev in t.runtime.allowed_devices or ():
+                    if self.topo.device(dev).role is topo_mod.Role.FREE:
+                        self.ledger.accrue("allocated_idle", dt, owner=t.name)
 
         if p.arbitration:
             # 1. grants not consumed by a scale-up flow back to the fleet
@@ -290,6 +308,15 @@ class FleetScheduler:
         finished: dict[str, list[int]] = {}
         for name, t in self.tenants.items():
             finished[name] = t.runtime.tick(now)
+            if self.slo_monitor is not None:
+                for rid in finished[name]:
+                    rec = t.runtime.router.records.get(rid)
+                    if rec is None:
+                        continue
+                    if rec.ttft is not None:
+                        self.slo_monitor.observe_ttft(name, now, rec.ttft)
+                    for tbt in rec.tbts():
+                        self.slo_monitor.observe_tbt(name, now, tbt)
             if t.fully_drained():
                 t.state = T.ZERO
                 t.idle_since = None
@@ -476,6 +503,15 @@ class FleetScheduler:
                     )
 
     # -- reporting -----------------------------------------------------------
+    def fleet_health(self, now: float | None = None) -> dict:
+        """Observe-only SLO summary (per-tenant quantiles, attainment, burn
+        rates) from the attached :class:`~repro.obs.slo.SLOMonitor`; empty
+        dict when the fleet runs unmonitored."""
+        if self.slo_monitor is None:
+            return {}
+        return self.slo_monitor.fleet_health(now if now is not None
+                                             else self._last_tick)
+
     def slo_reports(self):
         return {name: t.runtime.router.slo_report() for name, t in self.tenants.items()}
 

@@ -1,0 +1,325 @@
+"""Fleet utilization ledgers: exact device-second conservation + link-time
+attribution bounds.
+
+The load-bearing properties:
+
+  * **conservation is exact, not within-epsilon**: the simulator defines
+    ``gpu_time_s`` as ``ledger.total()``, and ``total()`` sums the per-state
+    floats in the same fixed order as ``sum(breakdown().values())`` — so the
+    invariant holds bit-for-bit across systems, seeds and scenarios;
+  * the link ledger's capacity-normalized busy-seconds can never exceed the
+    elapsed horizon per link (max-min conserves capacity), and attributed
+    bytes can never exceed ``cap_seen x horizon``;
+  * attaching either ledger changes NOTHING about the simulation — the
+    flow-event stream and all results stay bit-for-bit;
+  * the disagg runtime and the MaaS fleet accrue owner-attributed states
+    covering the full engine lifecycle (grant -> load -> serve -> drain).
+"""
+
+import math
+
+import pytest
+
+from repro.net import Flow, FlowEventLog, FlowKind, FlowSim
+from repro.obs import DEVICE_STATES, DeviceTimeLedger, LinkLedger
+from repro.obs.ledger import FLOW_GROUPS
+
+
+# ---------------------------------------------------------------------------
+# DeviceTimeLedger unit behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_ledger_accrue_and_views():
+    led = DeviceTimeLedger()
+    led.accrue("serving_prefill", 1.5, owner="a")
+    led.accrue("serving_decode", 2.5, owner="a")
+    led.accrue("loading_params", 1.0, owner="b")
+    led.accrue("allocated_idle", 0.0)  # no-op
+    led.accrue("draining", -1.0)  # no-op
+    assert led.total() == 5.0
+    bd = led.breakdown()
+    assert list(bd) == list(DEVICE_STATES)  # every state, fixed order
+    assert bd["serving_prefill"] == 1.5 and bd["stalled_waiting_layers"] == 0.0
+    assert led.owners() == ["a", "b"]
+    assert led.owner_breakdown("a")["serving_decode"] == 2.5
+    assert led.owner_breakdown("missing")["draining"] == 0.0
+    assert led.utilization() == pytest.approx(4.0 / 5.0)
+    m = led.as_metrics()
+    assert m["gpu_s.loading_params"] == 1.0 and len(m) == len(DEVICE_STATES)
+
+
+def test_ledger_rejects_unknown_state():
+    with pytest.raises(ValueError, match="unknown ledger state"):
+        DeviceTimeLedger().accrue("busy", 1.0)
+
+
+def test_empty_ledger_conserves_trivially():
+    led = DeviceTimeLedger()
+    assert led.total() == 0.0 == sum(led.breakdown().values())
+    assert led.utilization() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# simulator conservation: sum(device_seconds) == gpu_time_s, bit-for-bit
+# ---------------------------------------------------------------------------
+
+
+def _run(system, *, seed=0, duration=12.0, rate=4.0, **kw):
+    import repro.core.simulator as sim
+    from repro.serving import traces
+
+    cfg = {
+        "blitz": sim.BLITZ,
+        "sllm": sim.SLLM,
+        "fixed": sim.fixed_system("fixed", 2, 2),
+    }[system]
+    s = sim.Simulator(cfg, sim.profile_for("8b"), seed=seed, **kw)
+    return s.run(traces.burstgpt(duration=duration, base_rate=rate, seed=seed + 11))
+
+
+@pytest.mark.parametrize("system", ["blitz", "sllm", "fixed"])
+@pytest.mark.parametrize("seed", [0, 3])
+def test_device_seconds_sum_exactly_to_gpu_time(system, seed):
+    r = _run(system, seed=seed)
+    assert r.gpu_time_s > 0
+    assert set(r.device_seconds) == set(DEVICE_STATES)
+    # EXACT equality: both sides sum the same floats in the same order
+    assert sum(r.device_seconds.values()) == r.gpu_time_s
+    assert all(v >= 0.0 for v in r.device_seconds.values())
+
+
+def test_autoscaling_attributes_loading_time_fixed_does_not():
+    blitz = _run("blitz")
+    fixed = _run("fixed")
+    assert blitz.device_seconds["loading_params"] > 0  # live scales happened
+    assert fixed.device_seconds["loading_params"] == 0.0  # nothing ever scales
+    assert fixed.device_seconds["stalled_waiting_layers"] == 0.0
+    # serving time exists on both
+    assert blitz.device_seconds["serving_decode"] > 0
+    assert fixed.device_seconds["serving_decode"] > 0
+
+
+def test_ledger_is_observation_only():
+    """Attaching the link ledger + slo monitor changes nothing about the
+    simulation: flow events and results are bit-for-bit the plain run."""
+    import repro.core.simulator as sim
+    from repro.obs.slo import SLOMonitor
+    from repro.serving import traces
+
+    def lines(**kw):
+        s = sim.Simulator(sim.BLITZ, sim.profile_for("8b"), seed=0, **kw)
+        log = FlowEventLog()
+        s.flowsim.subscribe(log)
+        res = s.run(traces.burstgpt(duration=10.0, base_rate=4.0, seed=7))
+        return log.lines(), res.p99_ttft(), res.gpu_time_s
+
+    off = lines()
+    on = lines(link_ledger=LinkLedger(), slo_monitor=SLOMonitor(ttft_slo_s=1.0))
+    assert off == on
+
+
+# ---------------------------------------------------------------------------
+# LinkLedger: flow-kind attribution + capacity bounds
+# ---------------------------------------------------------------------------
+
+GB = 1e9
+
+
+def _flat_cluster(n_devs, *, hosts_per_leaf=2, bw=8.0):
+    from repro.core import topology as tp
+
+    return tp.make_cluster(n_devs, 1, hosts_per_leaf=hosts_per_leaf, bw_gbps=bw)
+
+
+def _check_link_bounds(led: LinkLedger):
+    horizon = led.horizon
+    for link_key in led.links():
+        busy = led.link_busy(link_key)
+        assert busy <= horizon * (1 + 1e-9) + 1e-6, (link_key, busy, horizon)
+        cap = led.cap_seen.get(link_key, 0.0)
+        link_bytes = sum(v for (k, _), v in led.bytes.items() if k == link_key)
+        assert link_bytes <= cap * horizon * (1 + 1e-9) + 1e-6
+
+
+def test_link_ledger_attributes_flow_kinds():
+    sim = FlowSim(_flat_cluster(4))
+    led = sim.attach_ledger(LinkLedger())
+    sim.start(Flow(FlowKind.KV_MIGRATION, 0, 1, GB), 0.0)
+    sim.start(Flow(FlowKind.COLD_START, 2, 3, GB), 0.0)
+    sim.advance_to(2.0)
+    assert led.horizon == 2.0
+    by_group = led.bytes_by_group()
+    assert by_group["kv"] > 0 and by_group["cold_start"] > 0
+    # full GB crossed every hop of each path
+    assert by_group["kv"] == pytest.approx(GB * 4, rel=0.5)
+    _check_link_bounds(led)
+
+
+def test_link_ledger_contended_link_busy_bounded_by_horizon():
+    """Two kinds sharing one ingress: per-link busy time sums across groups
+    yet never exceeds elapsed time (max-min conserves capacity)."""
+    sim = FlowSim(_flat_cluster(8, hosts_per_leaf=8))
+    led = sim.attach_ledger(LinkLedger())
+    for src, kind in ((0, FlowKind.KV_MIGRATION), (1, FlowKind.MULTICAST_HOP),
+                      (2, FlowKind.COLD_START), (3, FlowKind.KV_MIGRATION)):
+        sim.start(Flow(kind, src, 7, GB), 0.0)
+    sim.advance_to(10.0)
+    _check_link_bounds(led)
+    # the shared ingress was saturated for ~4s; attribution splits it
+    ingress = [k for k in led.links() if led.link_busy(k) > 3.5]
+    assert ingress, "no saturated link found"
+    bd = led.link_breakdown(ingress[0])
+    assert set(bd) >= {"kv", "multicast", "cold_start"}
+
+
+def test_link_ledger_background_serving_stream_accrues():
+    sim = FlowSim(_flat_cluster(4))
+    led = sim.attach_ledger(LinkLedger())
+    sim.start(Flow(FlowKind.SERVING, 3, 2, math.inf), 0.0)
+    sim.start(Flow(FlowKind.KV_MIGRATION, 0, 2, GB), 0.0)
+    sim.advance_to(3.0)
+    by_group = led.busy_by_group()
+    assert by_group["serving"] > 0 and by_group["kv"] > 0
+    _check_link_bounds(led)
+
+
+def test_link_ledger_survives_degraded_links():
+    """cap_seen keeps the max capacity ever observed, so the bytes bound
+    holds across a mid-run degrade."""
+    sim = FlowSim(_flat_cluster(4))
+    led = sim.attach_ledger(LinkLedger())
+    from repro.net import DEV_IN
+
+    sim.start(Flow(FlowKind.KV_MIGRATION, 0, 1, 4 * GB), 0.0)
+    sim.advance_to(1.0)
+    sim.degrade_link((DEV_IN, 1), 0.25, 1.0)
+    sim.advance_to(8.0)
+    _check_link_bounds(led)
+
+
+def test_simulator_link_ledger_end_to_end():
+    r_led = LinkLedger()
+    r = _run("blitz", link_ledger=r_led)
+    assert r.gpu_time_s > 0
+    assert r_led.horizon > 0
+    groups = r_led.groups()
+    assert "multicast" in groups  # live scales moved parameter bytes
+    _check_link_bounds(r_led)
+    assert r_led.busiest(3)  # non-empty, sorted hot-link view
+
+
+def test_flow_groups_cover_every_flow_kind():
+    assert set(FLOW_GROUPS) == set(FlowKind)
+
+
+# ---------------------------------------------------------------------------
+# disagg runtime + MaaS fleet accrual (owner attribution)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def fleet_ledger_run():
+    jax = pytest.importorskip("jax")
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core import topology as tp
+    from repro.core.autoscaler import PolicyConfig
+    from repro.models import transformer as TF
+    from repro.serving.maas import FleetPolicy, FleetScheduler
+    from repro.obs.slo import SLOMonitor
+
+    cfg = get_config("granite-8b", reduced=True)
+    params = TF.init_params(jax.random.PRNGKey(0), cfg)
+    topo = tp.add_host_sources(tp.make_cluster(2, 4, bw_gbps=100.0))
+    led = DeviceTimeLedger()
+    slo = SLOMonitor(ttft_slo_s=2.0, tbt_slo_s=1.0)
+    fleet = FleetScheduler(topo, policy=FleetPolicy(idle_to_zero_s=0.5),
+                           ledger=led, slo_monitor=slo)
+    for name in ("led-a", "led-b"):
+        fleet.add_model(
+            cfg.replace(name=name), params, n_prefill=1, n_decode=1,
+            n_slots=2, max_seq=48, model_bytes=int(50e6),
+            prefill_capacity_tps=200.0, decode_capacity_tps=50.0,
+            policy=PolicyConfig(max_instances=3, kv_upper=0.5,
+                                scale_down_timeout_s=0.4),
+        )
+    rng = np.random.default_rng(3)
+    t = 0.0
+    for _ in range(4):
+        fleet.submit("led-a", rng.integers(0, cfg.vocab_size, size=7).astype(np.int32), 5, t)
+    fleet.submit("led-b", rng.integers(0, cfg.vocab_size, size=7).astype(np.int32), 5, t)
+    for _ in range(2000):
+        if fleet.n_outstanding == 0:
+            break
+        t += 0.01
+        fleet.tick(t)
+    assert fleet.n_outstanding == 0
+    # idle past the timeout so draining time accrues too
+    for _ in range(100):
+        t += 0.05
+        fleet.tick(t)
+    return fleet, led, slo
+
+
+def test_fleet_ledger_owner_attribution(fleet_ledger_run):
+    fleet, led, _ = fleet_ledger_run
+    assert led.owners() == ["led-a", "led-b"]
+    assert led.total() == sum(led.breakdown().values())  # exact, fleet too
+    for owner in led.owners():
+        bd = led.owner_breakdown(owner)
+        assert bd["serving_decode"] > 0  # tokens were produced
+        assert sum(bd.values()) > 0
+    # scale-to-zero drained engines: drain time was accounted somewhere
+    assert led.breakdown()["draining"] > 0
+    # owner splits sum to the fleet-wide totals (every accrual is owner-keyed)
+    for s in DEVICE_STATES:
+        per_owner = sum(led.owner_breakdown(o)[s] for o in led.owners())
+        assert per_owner == pytest.approx(led.breakdown()[s])
+
+
+def test_fleet_health_surface(fleet_ledger_run):
+    fleet, _, slo = fleet_ledger_run
+    fh = fleet.fleet_health()
+    assert fh["status"] in ("ok", "warn", "page")
+    assert set(fh["tenants"]) == {"led-a", "led-b"}
+    th = fh["tenants"]["led-a"]
+    assert th["requests"] >= 4
+    assert th["ttft_p99_s"] is not None and th["ttft_p99_s"] >= 0
+    assert 0.0 <= th["ttft_attainment"] <= 1.0
+    assert set(th["burn_rate"]) == {f"{w:g}s" for w in slo.windows_s}
+    # an unmonitored fleet reports an empty surface, never raises
+    from repro.serving.maas import FleetScheduler as FS
+    from repro.core import topology as tp
+
+    bare = FS(tp.add_host_sources(tp.make_cluster(1, 2, bw_gbps=100.0)))
+    assert bare.fleet_health() == {}
+
+
+# ---------------------------------------------------------------------------
+# property test (hypothesis optional, like the rest of the repo)
+# ---------------------------------------------------------------------------
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - optional dev dependency
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.tuples(st.sampled_from(DEVICE_STATES),
+                              st.floats(min_value=0.0, max_value=1e6)),
+                    max_size=100))
+    def test_ledger_conservation_is_exact_for_any_accrual_order(entries):
+        led = DeviceTimeLedger()
+        for state, v in entries:
+            led.accrue(state, v, owner="t")
+        # bit-for-bit: total() and the breakdown sum add the same floats in
+        # the same DEVICE_STATES order
+        assert led.total() == sum(led.breakdown().values())
+        assert led.total() == sum(led.owner_breakdown("t").values())

@@ -72,6 +72,40 @@ def test_registry_counters_gauges_histograms():
     assert [t for t, _ in reg.series] == [1.5, 2.5]
 
 
+def test_histogram_boundary_values_stay_in_their_bucket():
+    """Regression: an observation exactly equal to bounds[i] belongs in
+    bucket i ("at or below bounds[i]") — bisect_right pushed every boundary
+    value one bucket too high, so e.g. observe(bounds[0]) landed in bucket 1
+    and a 1.0 s observation against a 1.0 s bucket read as over it."""
+    from repro.obs.metrics import Histogram
+
+    bounds = (0.5, 1.0, 5.0)
+    h = Histogram("h", bounds)
+    for b in bounds:
+        h.observe(b)
+    assert h.counts == [1, 1, 1, 0]
+    # strictly-above goes one bucket up; strictly-below stays down
+    h2 = Histogram("h2", bounds)
+    h2.observe(0.4999)
+    h2.observe(0.5001)
+    h2.observe(5.0001)
+    assert h2.counts == [1, 1, 0, 1]
+
+
+def test_registry_series_ring_buffer():
+    reg = MetricRegistry(series_maxlen=2)
+    for t in (1.0, 2.0, 3.0, 4.0):
+        reg.snap(t)
+    assert [t for t, _ in reg.series] == [3.0, 4.0]  # newest retained
+    assert reg.series_dropped == 2
+    # unbounded default: nothing dropped
+    free = MetricRegistry()
+    for t in (1.0, 2.0, 3.0):
+        free.snap(t)
+    assert len(free.series) == 3 and free.series_dropped == 0
+    assert free.series_maxlen is None
+
+
 def test_registry_cells_are_get_or_create():
     reg = MetricRegistry()
     assert reg.counter("x") is reg.counter("x")

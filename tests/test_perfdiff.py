@@ -1,0 +1,213 @@
+"""Perf-regression gate: BENCH record diffing, direction rules, CLI exit
+codes, and the committed-baseline self-diff CI relies on."""
+
+import copy
+import json
+import pathlib
+
+import pytest
+
+from repro.obs.perfdiff import (
+    DEFAULT_RULES,
+    EITHER,
+    HIGHER_BETTER,
+    INFO,
+    LOWER_BETTER,
+    diff_paths,
+    diff_records,
+    direction_for,
+    main,
+)
+
+REPO_ROOT = pathlib.Path(__file__).parent.parent
+
+
+def _rec(metrics, *, name="bench", smoke=False, schema=1):
+    return {"bench": name, "schema": schema, "git_sha": "abc", "seed": 0,
+            "smoke": smoke, "metrics": metrics}
+
+
+BASE = _rec({
+    "ttft_p99_s": 1.0,
+    "slo_attainment": 0.99,
+    "gpu_time_s": 500.0,
+    "wall_s_untraced": 3.0,
+    "net_scale_bytes": 1e9,
+})
+
+
+# ---------------------------------------------------------------------------
+# direction rules
+# ---------------------------------------------------------------------------
+
+
+def test_direction_rules_first_match_wins():
+    assert direction_for("ttft_p99_s") == LOWER_BETTER
+    assert direction_for("tbt_p99_s") == LOWER_BETTER
+    assert direction_for("slo_attainment") == HIGHER_BETTER
+    assert direction_for("tokens_throughput") == HIGHER_BETTER
+    assert direction_for("gpu_time_s") == LOWER_BETTER
+    assert direction_for("wall_s_untraced") == INFO
+    assert direction_for("plan_gen_ms.p50") == INFO
+    assert direction_for("net_scale_bytes") == EITHER  # catch-all
+    # attainment wall-clock? attainment wins (listed earlier than *_ms*)...
+    # actually *_ms* is earlier — verify precedence is literal list order
+    order = [p for p, _ in DEFAULT_RULES]
+    assert order.index("*_ms*") < order.index("*attainment*")
+
+
+# ---------------------------------------------------------------------------
+# diff_records statuses
+# ---------------------------------------------------------------------------
+
+
+def test_identical_records_no_findings():
+    rep = diff_records(BASE, copy.deepcopy(BASE))
+    assert rep.regressions() == [] and rep.improvements() == []
+    assert len(rep.diffs) == len(BASE["metrics"])
+
+
+def test_ttft_regression_flagged_at_20pct():
+    new = copy.deepcopy(BASE)
+    new["metrics"]["ttft_p99_s"] = 1.2  # +20% vs 10% tolerance
+    rep = diff_records(BASE, new, tolerance=0.1)
+    (r,) = rep.regressions()
+    assert r.name == "ttft_p99_s" and r.rel_delta == pytest.approx(0.2)
+    assert "regression" in r.describe() or "+20.0%" in r.describe()
+
+
+def test_attainment_drop_is_a_regression_rise_is_improvement():
+    worse = copy.deepcopy(BASE)
+    worse["metrics"]["slo_attainment"] = 0.80
+    rep = diff_records(BASE, worse, tolerance=0.1)
+    assert [d.name for d in rep.regressions()] == ["slo_attainment"]
+    better = copy.deepcopy(BASE)
+    better["metrics"]["ttft_p99_s"] = 0.5
+    rep = diff_records(BASE, better, tolerance=0.1)
+    assert [d.name for d in rep.improvements()] == ["ttft_p99_s"]
+    assert rep.regressions() == []
+
+
+def test_wall_clock_never_gates():
+    new = copy.deepcopy(BASE)
+    new["metrics"]["wall_s_untraced"] = 300.0  # 100x slower machine
+    rep = diff_records(BASE, new)
+    assert rep.regressions() == []
+    (d,) = [d for d in rep.diffs if d.name == "wall_s_untraced"]
+    assert d.status == "info"
+
+
+def test_deterministic_counter_drifts_both_ways():
+    for factor in (2.0, 0.5):
+        new = copy.deepcopy(BASE)
+        new["metrics"]["net_scale_bytes"] = 1e9 * factor
+        rep = diff_records(BASE, new, tolerance=0.1)
+        assert [d.name for d in rep.regressions()] == ["net_scale_bytes"]
+
+
+def test_missing_and_added_metrics():
+    new = copy.deepcopy(BASE)
+    del new["metrics"]["gpu_time_s"]
+    new["metrics"]["brand_new"] = 1.0
+    rep = diff_records(BASE, new)
+    assert [d.name for d in rep.missing()] == ["gpu_time_s"]
+    assert [d.name for d in rep.diffs if d.status == "added"] == ["brand_new"]
+    assert rep.regressions() == []  # neither gates by default
+
+
+def test_zero_baseline_uses_atol_floor():
+    old = _rec({"ttft_p99_s": 0.0})
+    new = _rec({"ttft_p99_s": 1e-12})
+    rep = diff_records(old, new, tolerance=0.1, atol=1e-9)
+    assert rep.regressions() == []  # noise over a 0 baseline doesn't explode
+
+
+def test_smoke_and_schema_mismatch_warn():
+    rep = diff_records(_rec({"a": 1.0}), _rec({"a": 1.0}, smoke=True, schema=2))
+    assert any("smoke" in w for w in rep.warnings)
+    assert any("schema" in w for w in rep.warnings)
+
+
+# ---------------------------------------------------------------------------
+# directory mode + CLI
+# ---------------------------------------------------------------------------
+
+
+def _write(tmp, sub, name, rec):
+    d = tmp / sub
+    d.mkdir(exist_ok=True)
+    (d / f"BENCH_{name}.json").write_text(json.dumps(rec))
+
+
+def test_dir_mode_pairs_by_name_and_warns_on_unpaired(tmp_path):
+    _write(tmp_path, "old", "a", BASE)
+    _write(tmp_path, "old", "only_old", _rec({"x": 1.0}))
+    _write(tmp_path, "new", "a", copy.deepcopy(BASE))
+    _write(tmp_path, "new", "only_new", _rec({"x": 1.0}))
+    rep = diff_paths(str(tmp_path / "old"), str(tmp_path / "new"))
+    assert rep.regressions() == []
+    assert any("only_old" in w for w in rep.warnings)
+    assert any("only_new" in w for w in rep.warnings)
+
+
+def test_mixed_file_and_dir_rejected(tmp_path):
+    _write(tmp_path, "old", "a", BASE)
+    with pytest.raises(ValueError):
+        diff_paths(str(tmp_path / "old"), str(tmp_path / "old" / "BENCH_a.json"))
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    old = tmp_path / "old.json"
+    old.write_text(json.dumps(BASE))
+    same = tmp_path / "same.json"
+    same.write_text(json.dumps(BASE))
+    bad = copy.deepcopy(BASE)
+    bad["metrics"]["ttft_p99_s"] = 1.2  # the acceptance scenario: p99 +20%
+    worse = tmp_path / "worse.json"
+    worse.write_text(json.dumps(bad))
+
+    assert main([str(old), str(same)]) == 0
+    out = capsys.readouterr().out
+    assert "PERF GATE: OK" in out
+
+    report = tmp_path / "report.json"
+    assert main([str(old), str(worse), "--tolerance", "0.1",
+                 "--json-out", str(report)]) == 1
+    err = capsys.readouterr().err
+    assert "PERF GATE: FAIL" in err
+    doc = json.loads(report.read_text())
+    assert doc["n_regressions"] == 1
+    assert doc["diffs"]
+
+
+def test_cli_fail_on_missing(tmp_path):
+    old = tmp_path / "old.json"
+    old.write_text(json.dumps(BASE))
+    shrunk = copy.deepcopy(BASE)
+    del shrunk["metrics"]["gpu_time_s"]
+    new = tmp_path / "new.json"
+    new.write_text(json.dumps(shrunk))
+    assert main([str(old), str(new)]) == 0
+    assert main([str(old), str(new), "--fail-on-missing"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# committed baselines: the CI contract
+# ---------------------------------------------------------------------------
+
+
+def test_committed_smoke_baselines_self_diff_clean():
+    """The committed smoke baselines must diff clean against themselves —
+    the trivial soundness check for the CI perf-gate invocation."""
+    smoke_dir = REPO_ROOT / "benchmarks" / "baselines" / "smoke"
+    assert smoke_dir.is_dir(), "committed smoke baselines missing"
+    assert list(smoke_dir.glob("BENCH_*.json")), "no records committed"
+    rep = diff_paths(str(smoke_dir), str(smoke_dir), tolerance=0.25)
+    assert rep.regressions() == [] and rep.warnings == []
+
+
+def test_committed_root_records_self_diff_clean():
+    names = list(REPO_ROOT.glob("BENCH_*.json"))
+    assert names, "no committed BENCH records at repo root"
+    rep = diff_paths(str(REPO_ROOT), str(REPO_ROOT))
+    assert rep.regressions() == []

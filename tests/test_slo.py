@@ -1,0 +1,188 @@
+"""Streaming SLO monitor: P² quantile accuracy, burn-rate windows,
+fleet_health shape, span ingestion.
+
+The P² estimator is validated against numpy's exact percentile on seeded
+samples (it's an approximation — tolerances are distribution-scale
+relative, tight enough to catch a broken marker update, loose enough not
+to flake on estimator variance)."""
+
+import numpy as np
+import pytest
+
+from repro.obs.slo import DEFAULT_WINDOWS_S, P2Quantile, SLOMonitor
+
+
+# ---------------------------------------------------------------------------
+# P² quantile estimator
+# ---------------------------------------------------------------------------
+
+
+def test_p2_rejects_degenerate_quantile():
+    with pytest.raises(ValueError):
+        P2Quantile(0.0)
+    with pytest.raises(ValueError):
+        P2Quantile(1.0)
+
+
+def test_p2_empty_and_small_counts():
+    q = P2Quantile(0.5)
+    assert q.value() is None
+    q.observe(3.0)
+    assert q.value() == 3.0  # nearest rank of a single sample
+    q.observe(1.0)
+    q.observe(2.0)
+    assert q.value() in (1.0, 2.0, 3.0)
+    assert q.count == 3
+
+
+@pytest.mark.parametrize("qq", [0.5, 0.9, 0.99])
+@pytest.mark.parametrize("dist,seed", [("uniform", 0), ("exp", 1), ("lognorm", 2)])
+def test_p2_tracks_numpy_percentile(qq, dist, seed):
+    rng = np.random.default_rng(seed)
+    n = 5000
+    xs = {
+        "uniform": rng.uniform(0, 10, n),
+        "exp": rng.exponential(2.0, n),
+        "lognorm": rng.lognormal(0.0, 1.0, n),
+    }[dist]
+    est = P2Quantile(qq)
+    for x in xs:
+        est.observe(float(x))
+    exact = float(np.percentile(xs, qq * 100))
+    scale = float(np.percentile(xs, 99)) or 1.0
+    # within 10% of the distribution's tail scale — catches any broken
+    # marker arithmetic while leaving room for estimator variance
+    assert abs(est.value() - exact) < 0.10 * scale, (est.value(), exact)
+
+
+def test_p2_monotone_input_is_exactish():
+    est = P2Quantile(0.5)
+    for i in range(1, 1001):
+        est.observe(float(i))
+    assert est.value() == pytest.approx(500.0, rel=0.05)
+
+
+def test_p2_is_deterministic():
+    def run():
+        e = P2Quantile(0.99)
+        rng = np.random.default_rng(42)
+        for x in rng.exponential(1.0, 500):
+            e.observe(float(x))
+        return e.value()
+
+    assert run() == run()
+
+
+# ---------------------------------------------------------------------------
+# burn-rate windows + status
+# ---------------------------------------------------------------------------
+
+
+def test_burn_rate_windows_and_status():
+    mon = SLOMonitor(ttft_slo_s=1.0, windows_s=(10.0, 100.0), target=0.9)
+    # 10% violations == exactly the 10% error budget -> burn 1.0 -> warn
+    for i in range(100):
+        mon.observe_ttft("t", float(i) * 0.1, 2.0 if i % 10 == 0 else 0.5)
+    th = mon.tenant_health("t")
+    assert th["burn_rate"]["100s"] == pytest.approx(1.0)
+    assert th["status"] == "warn"
+    # a later burst of pure violations fills the fast window -> page
+    for i in range(50):
+        mon.observe_ttft("t", 30.0 + i * 0.01, 5.0)
+    th = mon.tenant_health("t")
+    assert th["burn_rate"]["10s"] >= 10.0
+    assert th["status"] == "page"
+    # quiet recovery: the fast window drains first (sliding expiry)
+    for i in range(200):
+        mon.observe_ttft("t", 45.0 + i * 0.1, 0.1)
+    th = mon.tenant_health("t")
+    assert th["burn_rate"]["10s"] == 0.0
+    assert th["burn_rate"]["100s"] > 0.0  # slow window still remembers
+
+
+def test_no_slo_means_no_violations():
+    mon = SLOMonitor()  # no SLOs configured anywhere
+    mon.observe_ttft("t", 0.0, 1e9)
+    th = mon.tenant_health("t")
+    assert th["status"] == "ok" and th["ttft_attainment"] == 1.0
+
+
+def test_per_tenant_slo_override():
+    mon = SLOMonitor(ttft_slo_s=1.0, tbt_slo_s=None)
+    mon.set_slo("strict", ttft_slo_s=0.1)
+    mon.observe_ttft("strict", 0.0, 0.5)  # violates 0.1, fine vs default 1.0
+    mon.observe_ttft("lax", 0.0, 0.5)
+    assert mon.tenant_health("strict")["ttft_attainment"] == 0.0
+    assert mon.tenant_health("lax")["ttft_attainment"] == 1.0
+
+
+def test_tbt_stream_feeds_the_same_surface():
+    mon = SLOMonitor(tbt_slo_s=0.05)
+    for i in range(20):
+        mon.observe_tbt("t", i * 0.01, 0.01 if i % 2 else 0.1)
+    th = mon.tenant_health("t")
+    assert th["tbt_attainment"] == pytest.approx(0.5)
+    assert th["tbt_p99_s"] is not None
+    assert th["ttft_p99_s"] is None  # no TTFT observed
+
+
+# ---------------------------------------------------------------------------
+# fleet_health
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_health_shape_and_worst_status():
+    mon = SLOMonitor(ttft_slo_s=1.0, target=0.99)
+    mon.observe_ttft("good", 0.0, 0.1)
+    for i in range(30):
+        mon.observe_ttft("bad", i * 0.1, 9.0)
+    fh = mon.fleet_health()
+    assert fh["target"] == 0.99
+    assert fh["windows_s"] == list(DEFAULT_WINDOWS_S)
+    assert sorted(fh["tenants"]) == ["bad", "good"]
+    assert fh["tenants"]["good"]["status"] == "ok"
+    assert fh["tenants"]["bad"]["status"] == "page"
+    assert fh["status"] == "page"  # worst tenant wins
+    import json
+
+    json.dumps(fh)  # JSON-ready, no NaN/inf
+
+
+def test_fleet_health_empty_monitor():
+    fh = SLOMonitor().fleet_health()
+    assert fh["tenants"] == {} and fh["status"] == "ok"
+
+
+# ---------------------------------------------------------------------------
+# span ingestion (tracer -> monitor)
+# ---------------------------------------------------------------------------
+
+
+def test_ingest_spans_from_traced_sim():
+    from repro.obs.report import run_traced_sim
+
+    tracer, result = run_traced_sim(duration=8.0, rate=4.0, seed=0)
+    mon = SLOMonitor(ttft_slo_s=5.0)
+    n = mon.ingest_spans(list(tracer.spans))
+    finished = [r for r in result.requests if r.ttft is not None]
+    assert n == len(finished) > 0
+    th = mon.tenant_health("default")
+    assert th["requests"] == n
+    # streamed P99 close to the exact post-hoc percentile
+    exact = result.p99_ttft()
+    assert th["ttft_p99_s"] == pytest.approx(exact, rel=0.5, abs=0.05)
+
+
+def test_simulator_slo_hook_matches_span_ingestion():
+    """Feeding the monitor live (slo_monitor=) sees the same request
+    population as post-hoc span ingestion."""
+    import repro.core.simulator as sim
+    from repro.serving import traces
+
+    mon = SLOMonitor(ttft_slo_s=5.0)
+    s = sim.Simulator(sim.BLITZ, sim.profile_for("8b"), seed=0, slo_monitor=mon)
+    res = s.run(traces.burstgpt(duration=8.0, base_rate=4.0, seed=11))
+    finished = [r for r in res.requests if r.ttft is not None]
+    th = mon.tenant_health("sim")
+    assert th["requests"] == len(finished) > 0
+    assert mon._state("sim").tbt_n > 0  # completions streamed TBTs too
