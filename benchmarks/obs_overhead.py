@@ -1,54 +1,92 @@
 """Tracing overhead + the first recorded simulator perf baseline.
 
-Two questions:
+Three questions:
 
   1. what does enabling the span tracer cost?  (It must be cheap enough to
      leave on for any investigation — and literally free when disabled,
      which the golden-trace tests already pin behaviourally; this measures
-     the wall-clock side.)
-  2. what IS the seeded simulator's performance?  Until now the repo had
-     no recorded perf numbers at all; this writes ``BENCH_sim_baseline.json``
-     with the seeded run's TTFT/SLO/scale metrics so future PRs can diff.
+     the wall-clock side.)  Each configuration is timed as the **min of
+     repeats**: wall-clock minima converge to the true cost while means
+     absorb scheduler noise, so ``overhead_frac`` is stable enough to gate
+     in perfdiff (lower-better, wide per-rule tolerance).
+  2. what IS the seeded simulator's performance?  ``BENCH_sim_baseline.json``
+     records the seeded run's TTFT/SLO/scale metrics so future PRs diff.
+  3. does the anomaly path work end-to-end?  A final traced run injects a
+     device failure so the :class:`~repro.obs.flightrec.FlightRecorder`
+     dumps a deterministic incident bundle under ``incidents/`` — the CI
+     smoke job uploads it as an artifact, so every CI run leaves behind an
+     openable (ui.perfetto.dev) example incident.
 
 Run: ``PYTHONPATH=src python benchmarks/obs_overhead.py [--smoke]``
 """
 
 from __future__ import annotations
 
+import math
+import os
+import sys
 import time
 
-from benchmarks.common import bench_record, markdown_table, smoke
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+from common import bench_record, markdown_table, smoke
 
 import repro.core.simulator as sim
-from repro.obs import MetricRegistry, Tracer, chrome_trace
+from repro.obs import FlightRecorder, MetricRegistry, Tracer, chrome_trace
 from repro.serving import traces
 
 SEED = 0
+REPEATS = 3  # min-of-N wall clock per configuration
 
 
-def _run(duration: float, *, tracer=None, metrics=None):
+def _run(duration: float, *, tracer=None, metrics=None,
+         flight_recorder=None, fail_dev_at=None):
     s = sim.Simulator(sim.BLITZ, sim.profile_for("8b"), seed=SEED,
-                      tracer=tracer, metrics=metrics)
+                      tracer=tracer, metrics=metrics,
+                      flight_recorder=flight_recorder)
+    if fail_dev_at is not None:
+        s.schedule(fail_dev_at, lambda sm: sm.flowsim.fail_device(3, sm.now))
     tr = traces.burstgpt(duration=duration, base_rate=4.0, seed=SEED + 11)
     t0 = time.perf_counter()
     res = s.run(tr)
     return time.perf_counter() - t0, res
 
 
+def _best_of(duration: float, *, traced: bool):
+    """Min-of-REPEATS wall clock; returns (best_wall, tracer, metrics,
+    result) from the last repeat (seeded runs are identical, so which
+    repeat's artifacts we keep is immaterial)."""
+    best = math.inf
+    tracer = metrics = res = None
+    for _ in range(REPEATS):
+        tracer = Tracer() if traced else None
+        metrics = MetricRegistry() if traced else None
+        wall, res = _run(duration, tracer=tracer, metrics=metrics)
+        best = min(best, wall)
+    return best, tracer, metrics, res
+
+
 def main() -> dict:
     duration = 20.0 if smoke() else 60.0
 
     _run(5.0)  # warm imports/JIT-free paths so the timed runs compare fairly
-    wall_off, res_off = _run(duration)
-    tracer = Tracer()
-    metrics = MetricRegistry()
-    wall_on, res_on = _run(duration, tracer=tracer, metrics=metrics)
+    wall_off, _, _, res_off = _best_of(duration, traced=False)
+    wall_on, tracer, metrics, res_on = _best_of(duration, traced=True)
 
     assert res_on.p99_ttft() == res_off.p99_ttft(), (
         "tracing must not change simulation results"
     )
     export = chrome_trace(list(tracer.spans))
     overhead = (wall_on - wall_off) / wall_off if wall_off > 0 else 0.0
+
+    # anomaly path: same seeded scenario + a device failure at t=6 -> the
+    # flight recorder dumps a deterministic Perfetto-loadable incident
+    # bundle (CI uploads incidents/ as an artifact)
+    fr_tracer = Tracer()
+    recorder = FlightRecorder(fr_tracer, out_dir="incidents")
+    _run(duration, tracer=fr_tracer, flight_recorder=recorder, fail_dev_at=6.0)
+    assert recorder.dumps, "device failure must have triggered an incident dump"
 
     m = {
         "wall_s_untraced": wall_off,
@@ -57,6 +95,7 @@ def main() -> dict:
         "spans": float(len(tracer.spans)),
         "chrome_export_bytes": float(len(export)),
         "requests": float(len(res_off.requests)),
+        "incident_bundles": float(len(recorder.dumps)),
         "sim_duration_s": duration,
     }
     bench_record("obs_overhead", m, seed=SEED)
@@ -86,6 +125,7 @@ def main() -> dict:
          ["traced wall (s)", f"{wall_on:.3f}"],
          ["overhead", f"{overhead * 100:.1f}%"],
          ["spans", len(tracer.spans)],
+         ["incident bundles", len(recorder.dumps)],
          ["p99 TTFT (s)", f"{res_off.p99_ttft():.4f}"]],
     ))
     return m

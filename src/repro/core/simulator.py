@@ -298,6 +298,7 @@ class Simulator:
         metrics=None,
         slo_monitor=None,
         link_ledger=None,
+        flight_recorder=None,
     ):
         self.sys = system
         self.prof = prof
@@ -372,6 +373,12 @@ class Simulator:
         if self.tracer.enabled:
             self._bridge = NetEventBridge(self.tracer)
             self.flowsim.subscribe(self._bridge)
+        # optional flight recorder (repro.obs.flightrec.FlightRecorder):
+        # rides the same NetEvent subscription for its always-on ring and
+        # failure triggers; SLO-page triggers are polled from _monitor
+        self.flight_recorder = flight_recorder
+        if flight_recorder is not None:
+            flight_recorder.attach(self.flowsim)
         self._req_spans: dict[int, object] = {}  # rid -> request root span
         self._decode_spans: dict[int, object] = {}  # rid -> open decode span
         self._scale_spans: dict[int, object] = {}  # iid -> instance-load span
@@ -551,7 +558,7 @@ class Simulator:
                 op = self.tracer.span(
                     "scale_op", self.now, self.now + delay, cat="scale",
                     track="scale", phase=phase, plane=self.sys.data_plane,
-                    iid=inst.iid)
+                    iid=inst.iid, control_s=self.sys.control_plane_s)
                 self.tracer.instant("serving", self.now + delay, cat="scale",
                                     parent=op)
             self.push(self.now + delay, "scale_done", inst.iid)
@@ -573,7 +580,8 @@ class Simulator:
             # decision -> plan -> hops -> layer arrivals -> serving, one tree
             op = self.tracer.begin(
                 "scale_op", self.now, cat="scale", track="scale",
-                phase=phase, plane=self.sys.data_plane, n_instances=len(alloc))
+                phase=phase, plane=self.sys.data_plane, n_instances=len(alloc),
+                control_s=self.sys.control_plane_s)
 
         plan = None
         if self.sys.data_plane == "network_multicast":
@@ -941,6 +949,8 @@ class Simulator:
             m.counter("sim.net_scale_bytes").set(self.net_scale_bytes)
             m.counter("sim.kv_stream_bytes").set(self.kv_stream_bytes)
             m.snap(self.now)
+        if self.flight_recorder is not None:
+            self.flight_recorder.poll(self.now)
         if not self.sys.autoscale:
             return
         pre = self._live_instances("prefill")

@@ -124,3 +124,22 @@ class FlowEventLog:
         ``log.iter_kinds(*FAILURE_KINDS)`` for the replan-worthy subset)."""
         want = frozenset(kinds)
         return (ev for ev in self.events if ev.kind in want)
+
+    @property
+    def oldest_t(self) -> float | None:
+        """Timestamp of the oldest RETAINED event (None when empty) — a
+        window reader compares it against its window start to detect that
+        eviction already ate into the window."""
+        return self.events[0].t if self.events else None
+
+    def since(self, t: float) -> list[NetEvent]:
+        """Retained events at/after ``t`` (the flight-recorder window)."""
+        return [ev for ev in self.events if ev.t >= t]
+
+    def truncated_since(self, t: float) -> bool:
+        """True when events at/after ``t`` are KNOWN to have been evicted:
+        the ring has dropped events and the oldest retained one is already
+        inside the window (or nothing survives at all)."""
+        if self.dropped == 0:
+            return False
+        return self.oldest_t is None or self.oldest_t > t

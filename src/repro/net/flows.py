@@ -60,6 +60,13 @@ class Flow:
     # forwarding chain cannot deliver byte 0 at depth k before k store-and-
     # forward stages have elapsed)
     extra_latency_s: float = 0.0
+    # causal position inside a multicast execution (chain index / edge depth);
+    # None for every non-multicast flow.  Purely observational: the tracer
+    # bridge stamps these onto hop spans so a critical-path analyzer can
+    # reconstruct the forwarding DAG without tree-parenting overlapping
+    # pipelined hops under each other.
+    chain: int | None = None
+    hop: int | None = None
 
     # -- simulator-managed state --------------------------------------------
     remaining: float = dataclasses.field(init=False)

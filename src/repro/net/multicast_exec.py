@@ -90,6 +90,8 @@ class MulticastExecution:
                         on_complete=self._flow_done,
                         on_abort=self._flow_aborted,
                         tag=f"chain{ci}.hop{ei}",
+                        chain=ci,
+                        hop=ei,
                     )
                     for s, d in pairs
                 ]
@@ -116,6 +118,8 @@ class MulticastExecution:
                                 on_complete=self._flow_done,
                                 on_abort=self._flow_aborted,
                                 tag=f"chain{ci}.allgather{ei}",
+                                chain=ci,
+                                hop=ei,
                             )
                         )
                 st = _EdgeState(ci, ei, flows, pending=len(flows))

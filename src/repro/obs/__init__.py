@@ -16,6 +16,13 @@
     deterministic text form the golden tests pin;
   * :mod:`repro.obs.report` — TTFT attribution CLI
     (``python -m repro.obs.report``);
+  * :mod:`repro.obs.critical_path` — scale-operation makespan attribution
+    (``python -m repro.obs.report --scale-ops``) with an exact
+    conservation invariant (segments telescope to the span window in
+    rational arithmetic);
+  * :mod:`repro.obs.flightrec` — anomaly-triggered flight recorder:
+    always-on NetEvent ring + deterministic Perfetto-loadable incident
+    bundles on SLO page / device failure;
   * :mod:`repro.obs.perfdiff` — BENCH_*.json perf-regression differ
     (``python -m repro.obs.perfdiff``), the CI perf gate.
 
@@ -24,7 +31,16 @@ the universal default collaborator, so an un-instrumented run has zero
 behavioural or output difference.
 """
 
-from repro.obs.export import chrome_trace, load_chrome, text_trace
+from repro.obs.critical_path import (
+    SCALE_SEGMENTS,
+    BottleneckHop,
+    ScaleOpReport,
+    analyze_scale_ops,
+    format_scale_report,
+    summarize_scale_ops,
+)
+from repro.obs.export import chrome_trace, chrome_trace_doc, load_chrome, text_trace
+from repro.obs.flightrec import FlightRecorder
 from repro.obs.ledger import DEVICE_STATES, DeviceTimeLedger, LinkLedger
 from repro.obs.metrics import (
     DEFAULT_LATENCY_BUCKETS_S,
@@ -55,6 +71,14 @@ __all__ = [
     "P2Quantile",
     "SLOMonitor",
     "chrome_trace",
+    "chrome_trace_doc",
     "text_trace",
     "load_chrome",
+    "SCALE_SEGMENTS",
+    "BottleneckHop",
+    "ScaleOpReport",
+    "analyze_scale_ops",
+    "summarize_scale_ops",
+    "format_scale_report",
+    "FlightRecorder",
 ]

@@ -21,7 +21,7 @@ from typing import Iterable
 
 from repro.obs.trace import Span
 
-__all__ = ["chrome_trace", "text_trace", "load_chrome"]
+__all__ = ["chrome_trace", "chrome_trace_doc", "text_trace", "load_chrome"]
 
 _US = 1e6  # chrome trace timestamps are microseconds
 
@@ -48,8 +48,12 @@ def _tid_for(spans: Iterable[Span]) -> dict[str, int]:
     return tids
 
 
-def chrome_trace(spans: list[Span], *, pid: int = 1) -> str:
-    """Render ``spans`` as a Chrome trace-event JSON string."""
+def chrome_trace_doc(spans: list[Span], *, pid: int = 1) -> dict:
+    """The Chrome trace-event document as a dict — callers that need to
+    attach extra top-level keys (Perfetto ignores unknown ones, which is
+    what lets the flight recorder ship a single-file incident bundle that
+    still loads in the trace viewer) embed alongside ``traceEvents``
+    before serializing."""
     ordered = sorted(spans, key=lambda s: s.sid)
     tids = _tid_for(ordered)
     events: list[dict] = [
@@ -82,8 +86,13 @@ def chrome_trace(spans: list[Span], *, pid: int = 1) -> str:
             base["ph"] = "i"
             base["s"] = "t"
         events.append(base)
+    return {"displayTimeUnit": "ms", "traceEvents": events}
+
+
+def chrome_trace(spans: list[Span], *, pid: int = 1) -> str:
+    """Render ``spans`` as a Chrome trace-event JSON string."""
     return json.dumps(
-        {"displayTimeUnit": "ms", "traceEvents": events},
+        chrome_trace_doc(spans, pid=pid),
         sort_keys=True,
         separators=(",", ":"),
     )

@@ -245,6 +245,14 @@ def main(argv: list[str] | None = None) -> dict:
     ap.add_argument("--min-attribution", type=float, default=None,
                     help="exit non-zero when any request's TTFT attribution "
                     "falls below this fraction (CI gate)")
+    ap.add_argument("--scale-ops", action="store_true",
+                    help="report scale-operation critical paths (makespan "
+                    "partitioned into plan/queue/transfer/stall/cutover) "
+                    "instead of request TTFT")
+    ap.add_argument("--min-makespan-attribution", type=float, default=None,
+                    help="--scale-ops: exit non-zero when any scale op's "
+                    "makespan coverage falls below this fraction (CI gate, "
+                    "mirrors --min-attribution)")
     args = ap.parse_args(argv)
 
     if args.sim:
@@ -261,6 +269,43 @@ def main(argv: list[str] | None = None) -> dict:
         spans = load_chrome(args.trace)
     else:
         ap.error("give a trace file or --sim")
+
+    if args.scale_ops:
+        from repro.obs.critical_path import (
+            analyze_scale_ops,
+            format_scale_report,
+            summarize_scale_ops,
+        )
+
+        reports = analyze_scale_ops(spans)
+        summary = summarize_scale_ops(reports)
+        print(format_scale_report(reports, summary))
+        if args.json_out:
+            with open(args.json_out, "w") as f:
+                json.dump(summary, f, indent=1, sort_keys=True)
+            print(f"\nsummary -> {args.json_out}")
+        if args.min_makespan_attribution is not None:
+            if not reports:
+                print("FAIL: no closed scale_op spans to attribute",
+                      file=sys.stderr)
+                sys.exit(1)
+            bad = [r for r in reports
+                   if r.coverage < args.min_makespan_attribution]
+            if bad:
+                worst = min(bad, key=lambda r: r.coverage)
+                print(
+                    f"FAIL: {len(bad)} scale op(s) below "
+                    f"{args.min_makespan_attribution:.0%} makespan "
+                    f"attribution (worst sid={worst.sid} at "
+                    f"{worst.coverage:.1%})",
+                    file=sys.stderr,
+                )
+                sys.exit(1)
+            print(
+                f"makespan attribution gate OK: all {len(reports)} "
+                f"scale ops >= {args.min_makespan_attribution:.0%}"
+            )
+        return summary
 
     reqs = attribute_requests(spans)
     summary = summarize(reqs)

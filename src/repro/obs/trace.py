@@ -187,6 +187,12 @@ class NetEventBridge:
         self.tracer = tracer
         self._open: dict[int, Span] = {}  # id(flow) -> span
         self._pins: dict[int, tuple] = {}  # id(flow) -> (parent, name, cat)
+        # (parent sid, chain) -> {hop idx -> first hop-span sid}: lets hop k
+        # record its upstream hop's sid as an ATTR rather than a tree parent
+        # (pipelined hops overlap their upstream's interval, so tree-nesting
+        # them would violate the child-within-parent well-formedness that
+        # the span tests pin)
+        self._hops: dict[tuple, dict[int, int]] = {}
 
     def pin(
         self, flow, parent: Span | None, *, name: str | None = None,
@@ -203,7 +209,24 @@ class NetEventBridge:
         if k == ev.FLOW_STARTED:
             f = event.flow
             parent, name, cat = self._pins.pop(id(f), (None, None, None))
-            self._open[id(f)] = self.tracer.begin(
+            extra: dict[str, Any] = {}
+            chain = getattr(f, "chain", None)
+            key = None
+            if chain is not None:
+                extra["chain"] = chain
+                extra["hop"] = f.hop
+                if f.extra_latency_s > 0.0:
+                    # the store-and-forward prefix charged for upstream hops:
+                    # the critical-path analyzer splits a hop's duration into
+                    # latency vs bandwidth/contention with it
+                    extra["lat"] = f.extra_latency_s
+                psid = parent.sid if isinstance(parent, Span) else parent
+                if psid is not None:  # unpinned flows have no stable scope
+                    key = (psid, chain)
+                    up = self._hops.get(key, {}).get(f.hop - 1)
+                    if up is not None:
+                        extra["upstream"] = up  # sid of the hop this one forwards
+            sp = self.tracer.begin(
                 name or f"flow:{f.kind.value}",
                 event.t,
                 cat=cat or "network",
@@ -214,7 +237,11 @@ class NetEventBridge:
                 dst=f.dst,
                 size=float(f.size),
                 tag=f.tag,
+                **extra,
             )
+            if key is not None:
+                self._hops.setdefault(key, {}).setdefault(f.hop, sp.sid)
+            self._open[id(f)] = sp
         elif k in (ev.FLOW_COMPLETED, ev.FLOW_ABORTED):
             sp = self._open.pop(id(event.flow), None)
             if sp is not None:

@@ -37,7 +37,7 @@ from repro.core.live_scaling import LiveSession
 from repro.core.parameter_pool import ParameterPool
 from repro.net import FAILURE_KINDS, FlowSim, MulticastExecution, NetEvent
 from repro.obs.metrics import StatBlock
-from repro.obs.trace import NULL_TRACER
+from repro.obs.trace import NULL_TRACER, NetEventBridge
 from repro.serving.disagg import pools as P
 from repro.serving.disagg.kv_migration import KVMigrationChannel, make_payload
 from repro.serving.engine import InstanceEngine, ServeRequest
@@ -92,6 +92,7 @@ class ClusterRuntime:
         net: FlowSim | None = None,
         failure_subscription: bool = True,
         tracer=None,
+        bridge=None,
         metrics=None,
         ledger=None,
         verbose: bool = False,
@@ -140,6 +141,13 @@ class ClusterRuntime:
         # observability: the null tracer keeps every site a no-op; a bound
         # metrics registry mirrors RuntimeStats under runtime.<model>.*
         self.tracer = tracer if tracer is not None else NULL_TRACER
+        # flow->span bridge: a standalone traced runtime subscribes its own;
+        # under MaaS the fleet passes ONE shared bridge (the FlowSim is
+        # shared, so per-runtime bridges would emit duplicate flow spans)
+        self.bridge = bridge
+        if self.bridge is None and self.tracer.enabled:
+            self.bridge = NetEventBridge(self.tracer)
+            self.net.subscribe(self.bridge)
         self.metrics = metrics
         # device-time ledger (repro.obs.ledger.DeviceTimeLedger): every tick
         # attributes the elapsed interval to exclusive engine states, owner-
@@ -451,6 +459,11 @@ class ClusterRuntime:
             tracer=self.tracer if span is not None else None,
             parent_span=span,
         )
+        if self.bridge is not None and span is not None:
+            # pin BEFORE start: the chain's hop flows land under this op's
+            # scale_op span, which is what the critical-path analyzer
+            # partitions the makespan against
+            self.bridge.pin_all(exec_.flows, span)
         exec_.start(self.net, now)
         if exec_.aborted:
             # every hop aborted synchronously at start (no live route to the

@@ -34,7 +34,7 @@ from repro.core import topology as topo_mod
 from repro.core.parameter_pool import ParameterPool
 from repro.net import FAILURE_KINDS, FlowSim, NetEvent
 from repro.obs.metrics import MetricRegistry, StatBlock
-from repro.obs.trace import NULL_TRACER
+from repro.obs.trace import NULL_TRACER, NetEventBridge
 from repro.serving.disagg import pools as P
 from repro.serving.disagg.runtime import ClusterRuntime
 from repro.serving.maas import tenant as T
@@ -49,6 +49,11 @@ class FleetPolicy:
     preempt_pressure: float = 0.5  # victims must be *below* this priority
     max_grant_per_tick: int = 2  # per-tenant grant rate limit
     arbitration: bool = True  # False = static allocation (benchmark baseline)
+    # SLO-burn tie-break: at equal arbitration pressure, a tenant whose SLO
+    # monitor says ``page`` outranks one at ``warn`` outranks ``ok`` — the
+    # fleet_health() surface feeding back into the grant loop.  No-op when
+    # no SLOMonitor is attached.
+    slo_aware_arbitration: bool = True
     scale_to_zero: bool = True
     # admission control: when the fleet saturates (no grantable device and
     # every demander above saturation_pressure), queued requests of the
@@ -87,6 +92,7 @@ class FleetScheduler:
         metrics: MetricRegistry | None = None,
         ledger=None,
         slo_monitor=None,
+        flight_recorder=None,
         verbose: bool = False,
     ):
         self.topo = topo
@@ -102,6 +108,14 @@ class FleetScheduler:
         # RuntimeStats/TenantStats mirror into it under fleet./runtime.<m>./
         # tenant.<m>. prefixes — one queryable, JSON-able surface
         self.tracer = tracer if tracer is not None else NULL_TRACER
+        # ONE flow->span bridge for the whole fleet (the FlowSim is shared:
+        # per-runtime bridges would emit duplicate spans per flow); tenant
+        # runtimes receive it so _live_scale can pin its parameter flows
+        # under the scale_op span
+        self.bridge = None
+        if self.tracer.enabled:
+            self.bridge = NetEventBridge(self.tracer)
+            self.net.subscribe(self.bridge)
         self.metrics = metrics if metrics is not None else MetricRegistry()
         self.stats = FleetStats().bind(self.metrics, "fleet")
         # fleet-wide device-time ledger: tenant runtimes accrue their own
@@ -111,6 +125,12 @@ class FleetScheduler:
         # streaming SLO monitor: fed per-tenant from completed requests each
         # tick; fleet_health() is its observe-only summary surface
         self.slo_monitor = slo_monitor
+        # anomaly-triggered flight recorder: rides the same FlowSim
+        # subscription for failure triggers; SLO-page escalations are
+        # edge-detected by poll() at the end of every tick
+        self.flight_recorder = flight_recorder
+        if flight_recorder is not None:
+            flight_recorder.attach(self.net)
         self.verbose = verbose
         self._last_tick: float | None = None
         # first-class failure subscription: the scheduler learns of a
@@ -179,6 +199,7 @@ class FleetScheduler:
             # subscription would double-handle every failure
             failure_subscription=False,
             tracer=self.tracer,
+            bridge=self.bridge,
             metrics=self.metrics,
             ledger=self.ledger,
             **runtime_kw,
@@ -245,9 +266,15 @@ class FleetScheduler:
         #    FlowSim-estimated transfer time under current traffic.
         starved: list[tuple[Tenant, int]] = []
         if p.arbitration:
+            # SLO-burn tie-break: fleet_health() closes the loop here — at
+            # equal pressure a paging tenant outranks a warning one outranks
+            # a healthy one (all-zeros when unmonitored or disabled, so the
+            # sort degrades to the pressure-only policy)
+            slo_rank = self._slo_ranks(now)
             ranked = sorted(
                 self.tenants.values(),
-                key=lambda t: (t.priority(), t.class_weight),
+                key=lambda t: (t.priority(), slo_rank.get(t.name, 0),
+                               t.class_weight),
                 reverse=True,
             )
             free = set(self.free_devices())
@@ -327,6 +354,10 @@ class FleetScheduler:
                 t.stats.scaled_to_zero += 1
                 self.stats.scale_to_zero_events += 1
                 self._log(f"[fleet] {t.name}: at zero (host copy only)")
+        if self.flight_recorder is not None:
+            # after this tick's SLO observations landed, so a page triggered
+            # by them dumps in the same tick it escalates
+            self.flight_recorder.poll(now)
         return finished
 
     # -- failure subscription ------------------------------------------------
@@ -374,6 +405,19 @@ class FleetScheduler:
                     )
 
     # -- internals -----------------------------------------------------------
+    _SLO_RANK = {"ok": 0, "warn": 1, "page": 2}
+
+    def _slo_ranks(self, now: float) -> dict[str, int]:
+        """Per-tenant burn-rate severity for the arbitration tie-break;
+        empty (rank 0 for everyone) when unmonitored or disabled."""
+        if self.slo_monitor is None or not self.policy.slo_aware_arbitration:
+            return {}
+        return {
+            name: self._SLO_RANK.get(
+                self.slo_monitor.tenant_health(name, now).get("status", "ok"), 0)
+            for name in self.tenants
+        }
+
     def _rank_free_for(self, t: Tenant, free: set[int]) -> list[int]:
         """Placement-affinity order for granting ``free`` devices to ``t``:
         leaves holding a surviving GPU copy of the model first (the cold
@@ -504,9 +548,11 @@ class FleetScheduler:
 
     # -- reporting -----------------------------------------------------------
     def fleet_health(self, now: float | None = None) -> dict:
-        """Observe-only SLO summary (per-tenant quantiles, attainment, burn
-        rates) from the attached :class:`~repro.obs.slo.SLOMonitor`; empty
-        dict when the fleet runs unmonitored."""
+        """SLO summary (per-tenant quantiles, attainment, burn rates) from
+        the attached :class:`~repro.obs.slo.SLOMonitor`; empty dict when the
+        fleet runs unmonitored.  No longer observe-only: per-tenant status
+        feeds the arbitration tie-break (``slo_aware_arbitration``) and a
+        fleet-level ``page`` triggers the flight recorder's incident dump."""
         if self.slo_monitor is None:
             return {}
         return self.slo_monitor.fleet_health(now if now is not None

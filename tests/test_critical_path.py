@@ -1,0 +1,288 @@
+"""Scale-operation critical-path attribution (repro.obs.critical_path).
+
+The load-bearing properties:
+
+  * every closed ``scale_op`` span's makespan is partitioned into
+    plan/queue/transfer/stall/cutover with >= 95% coverage (the CI-gated
+    acceptance mirror of the TTFT-attribution gate);
+  * conservation is EXACT, not within-epsilon: the rational-arithmetic
+    segment sums telescope to the span window bit-for-bit, for every op,
+    across seeds (hypothesis property when available + a deterministic
+    seed sweep that always runs);
+  * the float view is self-consistent: ``sum(breakdown().values()) ==
+    attributed_s`` exactly (fixed summation order);
+  * the formatted report for the smoke scenario is golden-pinned
+    (``REGEN_GOLDEN=1`` to accept deliberate changes);
+  * bottleneck hops are classified latency/contention/bandwidth from the
+    span attrs the NetEventBridge stamps.
+"""
+
+import os
+import pathlib
+from fractions import Fraction
+
+import pytest
+
+from repro.obs.critical_path import (
+    SCALE_SEGMENTS,
+    analyze_scale_ops,
+    format_scale_report,
+    summarize_scale_ops,
+)
+from repro.obs.report import run_traced_sim
+from repro.obs.trace import Tracer
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+
+
+@pytest.fixture(scope="module")
+def traced_run():
+    return run_traced_sim(duration=10.0, rate=4.0, seed=0)
+
+
+@pytest.fixture(scope="module")
+def reports(traced_run):
+    tracer, _ = traced_run
+    return analyze_scale_ops(list(tracer.spans))
+
+
+# ---------------------------------------------------------------------------
+# the acceptance headline: >= 95% of every scale op's makespan attributed
+# ---------------------------------------------------------------------------
+
+
+def test_every_scale_op_is_attributed(reports):
+    assert reports, "smoke scenario produced no scale ops"
+    for r in reports:
+        assert set(r.segments_exact) == set(SCALE_SEGMENTS)
+        assert all(v >= 0 for v in r.segments_exact.values())
+        assert r.coverage >= 0.95, (
+            f"op {r.sid}: only {r.coverage:.1%} of makespan attributed "
+            f"({r.breakdown()})"
+        )
+
+
+def test_conservation_is_exact_not_approximate(reports):
+    """Rational arithmetic: segments telescope to the window bit-for-bit."""
+    for r in reports:
+        assert r.conserved()
+        total = sum((r.segments_exact[s] for s in SCALE_SEGMENTS), Fraction(0))
+        assert total == Fraction(r.t1) - Fraction(r.t0)
+
+
+def test_float_view_matches_exact_sum(reports):
+    """breakdown() and attributed_s sum the same floats in the same fixed
+    order, so equality is exact — no tolerance."""
+    for r in reports:
+        assert sum(r.breakdown().values()) == r.attributed_s
+        assert list(r.breakdown()) == list(SCALE_SEGMENTS)
+
+
+def test_network_ops_show_transfer_and_cutover(reports):
+    net_ops = [r for r in reports if r.n_flows > 0]
+    assert net_ops, "no scale op had pinned parameter flows"
+    for r in net_ops:
+        b = r.breakdown()
+        assert b["transfer"] > 0.0
+        assert r.bottleneck is not None
+        assert r.bottleneck.cause in ("latency", "contention", "bandwidth")
+        assert r.bottleneck.duration > 0.0
+
+
+def test_simple_plane_ops_carve_control_tail():
+    """Flowless data planes (SSD) still partition: the recorded control
+    window is cutover, the rest of the load is transfer."""
+    tracer, _ = run_traced_sim(system="ssd", duration=10.0, rate=4.0, seed=0)
+    reports = analyze_scale_ops(list(tracer.spans))
+    assert reports
+    for r in reports:
+        assert r.n_flows == 0
+        assert r.conserved() and r.coverage >= 0.95
+        b = r.breakdown()
+        assert b["transfer"] > 0.0
+        assert abs(b["cutover"] - 0.05) < 1e-9  # control_plane_s default
+
+
+# ---------------------------------------------------------------------------
+# cross-seed conservation (always runs; hypothesis widens it when present)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+def test_conservation_across_seeds(seed):
+    # some seeds never trip the autoscaler at this rate — an empty report
+    # list is fine (seed 0's non-emptiness is pinned by the fixtures above);
+    # what must hold for EVERY op that does exist is exact conservation
+    tracer, _ = run_traced_sim(duration=8.0, rate=3.0, seed=seed)
+    for r in analyze_scale_ops(list(tracer.spans)):
+        assert r.conserved(), f"seed {seed} op {r.sid} not conserved"
+        assert r.coverage >= 0.95
+
+
+# ---------------------------------------------------------------------------
+# synthetic span trees: classification + partition edge cases
+# ---------------------------------------------------------------------------
+
+
+def _synthetic_op(tracer, t0, t1, flow_windows, *, control_s=0.0, lat=None):
+    """One scale_op with hop flows at the given (a, b, size) windows."""
+    op = tracer.begin("scale_op", t0, cat="scale", track="scale",
+                      phase="prefill", plane="network_multicast",
+                      control_s=control_s)
+    for i, (a, b, size) in enumerate(flow_windows):
+        kw = dict(cat="network", parent=op, kind="multicast_hop",
+                  src=0, dst=i + 1, size=size, tag=f"chain0.hop{i}",
+                  chain=0, hop=i)
+        if lat is not None and i == len(flow_windows) - 1:
+            kw["lat"] = lat
+        tracer.span(f"flow:multicast_hop", a, b, **kw)
+    tracer.end(op, t1)
+    return op
+
+
+def test_synthetic_partition_labels_every_segment():
+    tr = Tracer()
+    # plan instant at 1.0, first flow 2.0-4.0, gap, second flow 5.0-6.0,
+    # op closes 7.0 with a 0.5 control window -> every segment non-zero
+    op = tr.begin("scale_op", 0.0, cat="scale", phase="prefill",
+                  plane="network_multicast", control_s=0.5)
+    tr.instant("plan", 1.0, cat="scale", parent=op)
+    tr.span("flow:multicast_hop", 2.0, 4.0, cat="network", parent=op,
+            kind="multicast_hop", src=0, dst=1, size=1e9, tag="chain0.hop0")
+    tr.span("flow:multicast_hop", 5.0, 6.0, cat="network", parent=op,
+            kind="multicast_hop", src=1, dst=2, size=1e9, tag="chain0.hop1")
+    tr.end(op, 7.0)
+    (r,) = analyze_scale_ops(tr.spans)
+    b = r.breakdown()
+    assert b["plan"] == 1.0      # [0, plan]
+    assert b["queue"] == 1.0     # [plan, first flow]
+    assert b["transfer"] == 3.0  # the two flow windows
+    assert b["stall"] == 1.5     # [4, 5] inter-hop gap + [6, 6.5] pre-control
+    assert b["cutover"] == 0.5   # the recorded control window
+    assert r.conserved() and r.coverage == 1.0
+
+
+def test_bottleneck_latency_classification():
+    tr = Tracer()
+    # the long hop's duration is mostly store-and-forward prefix
+    _synthetic_op(tr, 0.0, 3.0,
+                  [(0.0, 1.0, 1e9), (0.0, 2.5, 1e9)], lat=2.0)
+    (r,) = analyze_scale_ops(tr.spans)
+    assert r.bottleneck.cause == "latency"
+    assert r.bottleneck.latency_s == 2.0
+
+
+def test_bottleneck_contention_classification():
+    tr = Tracer()
+    # same latency-free hops, same size: the slow one runs at 1/5 the best
+    # sibling rate -> its share was squeezed by competing traffic
+    _synthetic_op(tr, 0.0, 6.0, [(0.0, 1.0, 1e9), (0.0, 5.0, 1e9)])
+    (r,) = analyze_scale_ops(tr.spans)
+    assert r.bottleneck.cause == "contention"
+
+
+def test_bottleneck_bandwidth_classification():
+    tr = Tracer()
+    # both hops at the same rate: the worst hop is simply link-rate bound
+    _synthetic_op(tr, 0.0, 2.2, [(0.0, 1.0, 1e9), (1.0, 2.0, 1e9)])
+    (r,) = analyze_scale_ops(tr.spans)
+    assert r.bottleneck.cause == "bandwidth"
+
+
+# ---------------------------------------------------------------------------
+# golden report + CLI gate
+# ---------------------------------------------------------------------------
+
+
+def test_scale_report_matches_golden(reports):
+    got = format_scale_report(reports)
+    path = GOLDEN_DIR / "critical_path.txt"
+    if os.environ.get("REGEN_GOLDEN"):
+        GOLDEN_DIR.mkdir(exist_ok=True)
+        path.write_text(got + "\n")
+    want = path.read_text().rstrip("\n")
+    assert got == want, (
+        "critical-path report drifted from golden (REGEN_GOLDEN=1 to accept)"
+    )
+
+
+def test_summary_shape(reports):
+    s = summarize_scale_ops(reports)
+    assert s["n_ops"] == len(reports) > 0
+    assert 0.95 <= s["min_coverage"] <= 1.0
+    assert set(s["segment_totals_s"]) == set(SCALE_SEGMENTS)
+    assert abs(sum(s["segment_shares"].values()) - 1.0) < 1e-9
+    assert all(c in ("latency", "contention", "bandwidth")
+               for c in s["bottleneck_causes"])
+
+
+def test_report_cli_scale_ops_gate():
+    from repro.obs import report as report_mod
+
+    summary = report_mod.main(
+        ["--sim", "--duration", "8", "--rate", "3", "--scale-ops",
+         "--min-makespan-attribution", "0.95"]
+    )
+    assert summary["n_ops"] > 0
+
+
+def test_analysis_roundtrips_through_chrome_export(traced_run):
+    """Coverage survives export -> load (report CLI's on-disk path)."""
+    from repro.obs.export import chrome_trace, load_chrome
+
+    tracer, _ = traced_run
+    loaded = load_chrome(chrome_trace(list(tracer.spans)))
+    direct = analyze_scale_ops(list(tracer.spans))
+    again = analyze_scale_ops(loaded)
+    assert [r.sid for r in again] == [r.sid for r in direct]
+    for a, d in zip(again, direct):
+        assert a.coverage >= 0.95
+        assert a.n_flows == d.n_flows
+
+
+# ---------------------------------------------------------------------------
+# property tests (hypothesis optional, like the rest of the repo)
+# ---------------------------------------------------------------------------
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - optional dev dependency
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=100, deadline=None)
+    @given(
+        st.floats(min_value=0.0, max_value=100.0),
+        st.floats(min_value=1e-6, max_value=50.0),
+        st.lists(
+            st.tuples(st.floats(min_value=0.0, max_value=1.0),
+                      st.floats(min_value=0.0, max_value=1.0)),
+            max_size=12,
+        ),
+        st.floats(min_value=0.0, max_value=1.0),
+    )
+    def test_segments_sum_to_window_bit_for_bit(t0, width, rel_flows, ctl):
+        """Arbitrary flow windows (overlapping, clipped, degenerate) inside
+        an arbitrary scale_op window: the rational segment sums ALWAYS
+        telescope to Fraction(t1) - Fraction(t0), exactly."""
+        t1 = t0 + width
+        tr = Tracer()
+        op = tr.begin("scale_op", t0, cat="scale", phase="prefill",
+                      plane="network_multicast", control_s=ctl * width)
+        for i, (a, b) in enumerate(rel_flows):
+            fa, fb = t0 + a * width, t0 + b * width
+            if fb < fa:
+                fa, fb = fb, fa
+            tr.span("flow:multicast_hop", fa, fb, cat="network", parent=op,
+                    kind="multicast_hop", src=0, dst=i + 1, size=1e9,
+                    tag=f"chain0.hop{i}")
+        tr.end(op, t1)
+        (r,) = analyze_scale_ops(tr.spans)
+        total = sum((r.segments_exact[s] for s in SCALE_SEGMENTS),
+                    Fraction(0))
+        assert total == Fraction(r.t1) - Fraction(r.t0)
+        assert all(v >= 0 for v in r.segments_exact.values())

@@ -1,0 +1,216 @@
+"""Anomaly-triggered flight recorder (repro.obs.flightrec).
+
+The load-bearing properties:
+
+  * a device/leaf failure observed through the recorder's FlowSim
+    subscription dumps ONE incident bundle, byte-identical across
+    identically-seeded runs, that still loads as a Chrome/Perfetto trace
+    (the ``incident`` header is an ignored unknown top-level key);
+  * an SLO-monitor escalation to ``page`` is edge-triggered: one bundle
+    per escalation, re-armed only after the fleet recovers;
+  * attaching the recorder changes NOTHING about the simulation — the
+    flow-event stream is bit-for-bit the unrecorded one;
+  * ring eviction is surfaced, not silent: the bundle header carries the
+    ring's ``dropped`` count and an explicit ``truncated`` flag when
+    eviction ate into the dump window, plus a one-time warning metric.
+"""
+
+import json
+
+import pytest
+
+import repro.core.simulator as sim
+from repro.net import FlowEventLog
+from repro.net.events import DEVICE_FAILED, FLOW_STARTED, NetEvent
+from repro.obs import FlightRecorder, MetricRegistry, SLOMonitor, Tracer
+from repro.serving import traces
+
+
+def _failure_run(tmp_path, *, seed=0, ring=1024):
+    tracer = Tracer()
+    rec = FlightRecorder(tracer, out_dir=str(tmp_path), ring=ring)
+    s = sim.Simulator(sim.BLITZ, sim.profile_for("8b"), seed=seed,
+                      tracer=tracer, flight_recorder=rec)
+    s.schedule(6.0, lambda sm: sm.flowsim.fail_device(3, sm.now))
+    s.run(traces.burstgpt(duration=12.0, base_rate=4.0, seed=seed + 11))
+    return rec
+
+
+def test_device_failure_dumps_incident_bundle(tmp_path):
+    rec = _failure_run(tmp_path)
+    assert len(rec.dumps) == 1
+    doc = json.loads(open(rec.dumps[0]).read())
+    inc = doc["incident"]
+    assert inc["trigger"] == "net:device_failed"
+    assert inc["context"]["device"] == 3
+    assert inc["t"] == 6.0 and inc["schema"] == 1
+    # the ring captured the pre-incident window and nothing was lost
+    assert inc["ring"]["dropped"] == 0 and inc["ring"]["truncated"] is False
+    assert inc["ring"]["events"], "dump window contains no net events"
+    # the mid-flight scale op appears in the critical-path section
+    assert inc["critical_path"]["n_ops"] >= 1
+    for op in inc["critical_path"]["ops"]:
+        assert op["coverage"] >= 0.95
+
+
+def test_incident_bundle_is_perfetto_loadable(tmp_path):
+    rec = _failure_run(tmp_path)
+    doc = json.loads(open(rec.dumps[0]).read())
+    # regular Chrome trace shape: viewers ignore the extra "incident" key
+    assert doc["displayTimeUnit"] == "ms"
+    evs = doc["traceEvents"]
+    assert evs and all(e["ph"] in ("M", "X", "i") for e in evs)
+    names = {e["name"] for e in evs if e["ph"] != "M"}
+    assert "scale_op" in names  # the op in flight at the failure
+    # only the trailing window is shipped, not the whole run
+    w0 = (6.0 - rec.window_s) * 1e6
+    for e in evs:
+        if e["ph"] != "M":
+            assert e["ts"] + e.get("dur", 0.0) >= w0 - 1.0
+
+
+def test_incident_bundle_is_byte_deterministic(tmp_path):
+    a = _failure_run(tmp_path / "a")
+    b = _failure_run(tmp_path / "b")
+    ba = open(a.dumps[0], "rb").read()
+    bb = open(b.dumps[0], "rb").read()
+    assert ba == bb
+
+
+def test_flight_recorder_changes_nothing(tmp_path):
+    def lines(flight_recorder):
+        s = sim.Simulator(sim.BLITZ, sim.profile_for("8b"), seed=0,
+                          tracer=Tracer() if flight_recorder else None,
+                          flight_recorder=flight_recorder)
+        log = FlowEventLog()
+        s.flowsim.subscribe(log)
+        s.schedule(6.0, lambda sm: sm.flowsim.fail_device(3, sm.now))
+        res = s.run(traces.burstgpt(duration=12.0, base_rate=4.0, seed=7))
+        return log.lines(), res.p99_ttft()
+
+    off_lines, off_p99 = lines(None)
+    rec = FlightRecorder(Tracer(), out_dir=str(tmp_path))
+    on_lines, on_p99 = lines(rec)
+    assert off_lines == on_lines
+    assert off_p99 == on_p99
+    assert rec.dumps  # and it still dumped the incident
+
+
+# ---------------------------------------------------------------------------
+# SLO-page trigger (edge-triggered via poll)
+# ---------------------------------------------------------------------------
+
+
+def _paging_monitor():
+    mon = SLOMonitor(ttft_slo_s=0.1, windows_s=(5.0,))
+    for i in range(40):  # every observation misses -> fast burn -> page
+        mon.observe_ttft("m", 1.0 + i * 0.1, 5.0)
+    return mon
+
+
+def test_slo_page_triggers_one_dump(tmp_path):
+    mon = _paging_monitor()
+    rec = FlightRecorder(Tracer(), slo_monitor=mon, out_dir=str(tmp_path))
+    assert mon.fleet_health(5.0)["status"] == "page"
+    rec.poll(5.0)
+    assert len(rec.dumps) == 1
+    doc = json.loads(open(rec.dumps[0]).read())
+    assert doc["incident"]["trigger"] == "slo:page"
+    assert doc["incident"]["context"]["tenants"] == ["m"]
+    assert doc["incident"]["fleet_health"]["status"] == "page"
+    # edge-triggered: still paging -> no second dump
+    rec.poll(5.5)
+    assert len(rec.dumps) == 1
+
+
+def test_slo_page_rearms_after_recovery(tmp_path):
+    mon = _paging_monitor()
+    rec = FlightRecorder(Tracer(), slo_monitor=mon, out_dir=str(tmp_path))
+    rec.poll(5.0)
+    assert len(rec.dumps) == 1
+    # burn windows drain -> status recovers -> re-armed
+    far = 5.0 + 10 * max(mon.windows_s)
+    assert mon.fleet_health(far)["status"] != "page"
+    rec.poll(far)
+    for i in range(40):
+        mon.observe_ttft("m", far + i * 0.1, 5.0)
+    rec.poll(far + 4.0)
+    assert len(rec.dumps) == 2
+
+
+def test_fleet_scheduler_polls_recorder(tmp_path):
+    """The MaaS control loop drives poll(): a paging tenant mid-run dumps
+    without any simulator involvement."""
+    from repro.core import topology as tp
+    from repro.serving.maas import FleetScheduler
+
+    mon = _paging_monitor()
+    rec = FlightRecorder(Tracer(), slo_monitor=mon, out_dir=str(tmp_path))
+    fleet = FleetScheduler(
+        tp.add_host_sources(tp.make_cluster(2, 4, bw_gbps=100.0)),
+        slo_monitor=mon, flight_recorder=rec,
+    )
+    fleet.tick(5.0)
+    assert len(rec.dumps) == 1
+
+
+# ---------------------------------------------------------------------------
+# ring truncation surfacing (the silent-eviction bugfix)
+# ---------------------------------------------------------------------------
+
+
+def _flow_event(t):
+    from repro.net.flows import Flow, FlowKind
+
+    return NetEvent(FLOW_STARTED, t,
+                    flow=Flow(FlowKind.COLD_START, 0, 1, 1.0))
+
+
+def test_truncated_dump_is_flagged_and_counted(tmp_path):
+    metrics = MetricRegistry()
+    rec = FlightRecorder(Tracer(), ring=4, metrics=metrics,
+                         out_dir=str(tmp_path), window_s=100.0)
+    for i in range(20):  # 16 evictions: the window start is long gone
+        rec._on_net_event(_flow_event(float(i)))
+    rec.trigger("test:manual", 19.0)
+    doc = json.loads(open(rec.dumps[0]).read())
+    ring = doc["incident"]["ring"]
+    assert ring["dropped"] == 16
+    assert ring["truncated"] is True
+    assert len(ring["events"]) == 4
+    assert metrics.counter("flightrec.truncated_dumps").value == 1
+    # one-time: a second truncated dump doesn't re-count
+    rec.trigger("test:manual", 19.5)
+    assert metrics.counter("flightrec.truncated_dumps").value == 1
+
+
+def test_untruncated_ring_with_drops_outside_window(tmp_path):
+    """Evictions older than the window are NOT truncation: everything the
+    dump asked for is still in the ring."""
+    rec = FlightRecorder(Tracer(), ring=4, out_dir=str(tmp_path),
+                         window_s=2.0)
+    for i in range(20):
+        rec._on_net_event(_flow_event(float(i)))
+    rec.trigger("test:manual", 19.0)  # window [17, 19]; ring holds [16..19]
+    ring = json.loads(open(rec.dumps[0]).read())["incident"]["ring"]
+    assert ring["dropped"] == 16
+    assert ring["truncated"] is False
+
+
+def test_max_dumps_cap(tmp_path):
+    metrics = MetricRegistry()
+    rec = FlightRecorder(Tracer(), out_dir=str(tmp_path), max_dumps=2,
+                         metrics=metrics)
+    for i in range(5):
+        rec.trigger("test:storm", float(i))
+    assert len(rec.dumps) == 2 and rec.skipped == 3
+    assert metrics.counter("flightrec.skipped_dumps").value == 3
+
+
+def test_failure_events_trigger_via_subscription(tmp_path):
+    rec = FlightRecorder(Tracer(), out_dir=str(tmp_path))
+    rec._on_net_event(NetEvent(DEVICE_FAILED, 3.0, device=7))
+    assert len(rec.dumps) == 1
+    doc = json.loads(open(rec.dumps[0]).read())
+    assert doc["incident"]["trigger"] == "net:device_failed"
+    assert doc["incident"]["context"]["device"] == 7

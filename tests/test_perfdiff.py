@@ -17,6 +17,7 @@ from repro.obs.perfdiff import (
     diff_records,
     direction_for,
     main,
+    rule_for,
 )
 
 REPO_ROOT = pathlib.Path(__file__).parent.parent
@@ -50,9 +51,14 @@ def test_direction_rules_first_match_wins():
     assert direction_for("wall_s_untraced") == INFO
     assert direction_for("plan_gen_ms.p50") == INFO
     assert direction_for("net_scale_bytes") == EITHER  # catch-all
+    # overhead_frac gates (lower-better) with its own wide tolerance rather
+    # than following the informational wall-clock rules
+    assert direction_for("overhead_frac") == LOWER_BETTER
+    assert rule_for("overhead_frac") == (LOWER_BETTER, 2.0)
+    assert rule_for("ttft_p99_s") == (LOWER_BETTER, None)
     # attainment wall-clock? attainment wins (listed earlier than *_ms*)...
     # actually *_ms* is earlier — verify precedence is literal list order
-    order = [p for p, _ in DEFAULT_RULES]
+    order = [r[0] for r in DEFAULT_RULES]
     assert order.index("*_ms*") < order.index("*attainment*")
 
 
