@@ -22,6 +22,7 @@ SUITES = [
     ("fig20_ablation", "Fig.20 +Network/+Multicast/+ZigZag ablation"),
     ("fig21_live_timeline", "Fig.21 live-scale throughput timeline"),
     ("net_contention", "Flow-level data plane: contended/degraded links"),
+    ("net_scale", "Fleet-scale FlowSim: incremental engine vs full solve"),
     ("plan_generation", "§5.1/5.2 plan-gen + ZigZag solver latency"),
     ("kernel_micro", "App.A kernel micro (Pallas vs oracle)"),
     ("roofline", "§Roofline table from dry-run artifacts"),

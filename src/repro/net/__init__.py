@@ -14,6 +14,7 @@ from repro.net.events import (
     FAILURE_KINDS,
     FLOW_ABORTED,
     FLOW_COMPLETED,
+    FLOW_REROUTED,
     FLOW_STARTED,
     LEAF_FAILED,
     LINK_DEGRADED,
@@ -23,7 +24,7 @@ from repro.net.events import (
     NetEvent,
 )
 from repro.net.flows import Flow, FlowKind
-from repro.net.flowsim import FlowSim, maxmin_rates
+from repro.net.flowsim import FlowSim, flow_done_eps, maxmin_rates
 from repro.net.links import (
     DEV_IN,
     DEV_OUT,
@@ -43,6 +44,7 @@ __all__ = [
     "FlowEventLog",
     "NetEvent",
     "maxmin_rates",
+    "flow_done_eps",
     "MulticastExecution",
     "Link",
     "LinkProfile",
@@ -55,6 +57,7 @@ __all__ = [
     "FLOW_STARTED",
     "FLOW_COMPLETED",
     "FLOW_ABORTED",
+    "FLOW_REROUTED",
     "LINK_DEGRADED",
     "LINK_FAILED",
     "LINK_RECOVERED",

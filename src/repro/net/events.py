@@ -13,7 +13,8 @@ in simulation order:
 
   * ``FLOW_STARTED`` / ``FLOW_COMPLETED`` / ``FLOW_ABORTED`` — one per flow
     lifecycle edge (per-flow callbacks fire first, then subscribers see the
-    settled world);
+    settled world); ``FLOW_REROUTED`` when a failure moved a live flow onto
+    a surviving spine plane instead of aborting it;
   * ``LINK_DEGRADED`` / ``LINK_FAILED`` / ``LINK_RECOVERED`` and
     ``DEVICE_FAILED`` / ``DEVICE_RECOVERED`` / ``LEAF_FAILED`` — scenario
     mutations.  Failure events are emitted AFTER the evicted flows' aborts
@@ -38,6 +39,11 @@ if TYPE_CHECKING:  # pragma: no cover - typing only
 FLOW_STARTED = "flow_started"
 FLOW_COMPLETED = "flow_completed"
 FLOW_ABORTED = "flow_aborted"
+#: a link/device/leaf failure moved a still-live flow onto a surviving
+#: spine plane instead of aborting it; emitted after the failure's aborts
+#: settle and BEFORE the failure event itself, so incident bundles show
+#: the reroute inside the failure window
+FLOW_REROUTED = "flow_rerouted"
 LINK_DEGRADED = "link_degraded"
 LINK_FAILED = "link_failed"
 LINK_RECOVERED = "link_recovered"

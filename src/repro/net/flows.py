@@ -81,6 +81,14 @@ class Flow:
     # bit-for-bit identical to the pure bandwidth model)
     active_at: float | None = None
     path: list[Link] = dataclasses.field(default_factory=list, repr=False)
+    # admission order on the simulator (ties in the event calendar break on
+    # it, and every introspection API sorts by it so results keep the
+    # engine's start order regardless of index layout); -1 = never admitted
+    seq: int = dataclasses.field(init=False, default=-1, repr=False)
+    # calendar generation: bumped whenever the flow's projected event time
+    # goes stale (rate change, reroute, removal) — heap entries carrying an
+    # older generation are discarded lazily on pop
+    cal_gen: int = dataclasses.field(init=False, default=0, repr=False)
 
     def __post_init__(self):
         self.remaining = float(self.size)

@@ -90,6 +90,12 @@ class Link:
     def rate_cap(self) -> float:
         return 0.0 if self.failed else self.capacity * self.degrade
 
+    @property
+    def is_spine(self) -> bool:
+        """True for leaf<->spine uplinks/downlinks — the links whose
+        population decides load-balanced plane selection in the router."""
+        return self.key[0] in (LEAF_UP, LEAF_DOWN)
+
     def __repr__(self) -> str:  # pragma: no cover - debug aid
         state = "FAILED" if self.failed else (
             f"x{self.degrade:g}" if self.degrade != 1.0 else "ok"

@@ -134,7 +134,9 @@ class KVMigrationChannel:
         return [f for f in self.net.flows if f.kind is FlowKind.KV_MIGRATION]
 
     def inflight_to(self, dev: int) -> int:
-        return sum(1 for f in self.flows if f.dst == dev)
+        # indexed on the simulator (dst table) — no scan over the fleet's
+        # whole flow population just to admit one migration
+        return len(self.net.flows_into(dev, (FlowKind.KV_MIGRATION,)))
 
     # -- transfer lifecycle -------------------------------------------------
     def start(self, payload: MigrationPayload, now: float) -> None:

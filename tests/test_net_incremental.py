@@ -1,0 +1,318 @@
+"""Incremental FlowSim engine == reference engine, bit for bit.
+
+The fleet-scale engine (``incremental=True``, the default) re-solves only
+the bottleneck component an event touches and replaces the per-step linear
+min/done scans with an event calendar.  Its contract is EXACT equivalence:
+same rates (float for float), same event stream, same completion times as
+the pre-refactor full-solve engine, which survives as ``incremental=False``.
+
+This module drives both engines through mirrored randomized op sequences
+(starts, batched starts, removals, advances, degrades, failures with
+reroutes, recoveries) and asserts lockstep equality after every op — as
+seeded deterministic tests that always run, and as a hypothesis property
+when hypothesis is installed.  It also pins the two satellite fixes that
+rode along with the refactor: the live/estimator completion-epsilon
+unification (``flow_done_eps``) and the reroute latency re-charge +
+``FLOW_REROUTED`` emission on path failover.
+"""
+
+import math
+import random
+
+import pytest
+
+from repro.core import topology as tp
+from repro.net import (
+    DEV_IN,
+    DEV_OUT,
+    FLOW_REROUTED,
+    LEAF_UP,
+    LINK_FAILED,
+    Flow,
+    FlowEventLog,
+    FlowKind,
+    FlowSim,
+    flow_done_eps,
+    maxmin_rates,
+)
+
+GB = 1e9
+
+
+def _flat_cluster(n_devs: int, *, hosts_per_leaf: int = 2, bw: float = 8.0):
+    return tp.make_cluster(n_devs, 1, hosts_per_leaf=hosts_per_leaf, bw_gbps=bw)
+
+
+# ---------------------------------------------------------------------------
+# Mirrored-op differential driver
+# ---------------------------------------------------------------------------
+
+
+def _assert_lockstep(a: FlowSim, b: FlowSim):
+    """Exact state equality between the incremental and reference engines."""
+    assert a.now == b.now
+    assert [f.tag for f in a.flows] == [f.tag for f in b.flows]
+    # the headline claim: identical allocations, float for float
+    assert [f.rate for f in a.flows] == [f.rate for f in b.flows]
+    assert [f.remaining for f in a.flows] == [f.remaining for f in b.flows]
+    assert [f.active_at for f in a.flows] == [f.active_at for f in b.flows]
+    assert a.next_event_time() == b.next_event_time()
+    assert (a.completed_count, a.aborted_count) == (
+        b.completed_count,
+        b.aborted_count,
+    )
+
+
+def _assert_indices_coherent(sim: FlowSim):
+    """The link/endpoint indices agree with a from-scratch linear scan."""
+    for key, d in sim._link_flows.items():
+        expect = {f for f in sim.flows if any(l.key == key for l in f.path)}
+        assert set(d) == expect, key
+    for f in sim.flows:
+        for l in f.path:
+            assert f in sim._link_flows[l.key]
+        assert f in sim._src_flows[f.src]
+        assert f in sim._dst_flows[f.dst]
+
+
+def _assert_rates_match_full_solve(sim: FlowSim):
+    """Incremental per-component rates == one fresh full progressive-filling
+    solve over the current active set (exact equality — the component
+    decomposition argument, checked empirically)."""
+    active = [f for f in sim.flows if f.active_at is None]
+    fresh = maxmin_rates([f.path for f in active])
+    assert [f.rate for f in active] == fresh
+
+
+def _run_mirrored(seed: int, *, n_devs=8, n_ops=40, latency=0.0, planes=1):
+    rng = random.Random(seed)
+    kw = dict(link_latency_s=latency, spine_planes=planes)
+    a = FlowSim(_flat_cluster(n_devs), incremental=True, **kw)
+    b = FlowSim(_flat_cluster(n_devs), incremental=False, **kw)
+    assert a.incremental and not b.incremental
+    la, lb = FlowEventLog(), FlowEventLog()
+    a.subscribe(la)
+    b.subscribe(lb)
+    done_a, done_b = [], []
+    a_by_tag, b_by_tag = {}, {}
+    uid = 0
+
+    def mk_pair(src, dst, size):
+        nonlocal uid
+        tag = f"f{uid}"
+        uid += 1
+        fa = Flow(FlowKind.KV_MIGRATION, src, dst, size, tag=tag,
+                  on_complete=lambda f, t: done_a.append((f.tag, t)))
+        fb = Flow(FlowKind.KV_MIGRATION, src, dst, size, tag=tag,
+                  on_complete=lambda f, t: done_b.append((f.tag, t)))
+        a_by_tag[tag], b_by_tag[tag] = fa, fb
+        return fa, fb
+
+    def rand_size():
+        r = rng.random()
+        if r < 0.1:
+            return math.inf  # persistent background stream
+        if r < 0.2:
+            return 1e-10  # sub-epsilon payload (instant-ish completion)
+        return rng.uniform(0.05, 4.0) * GB
+
+    for _ in range(n_ops):
+        op = rng.random()
+        if op < 0.35:  # start one flow
+            src, dst = rng.randrange(n_devs), rng.randrange(n_devs)
+            fa, fb = mk_pair(src, dst, rand_size())
+            a.start(fa, a.now)
+            b.start(fb, b.now)
+        elif op < 0.5:  # batched start (one re-solve for the whole batch)
+            batch_a, batch_b = [], []
+            for _ in range(rng.randint(2, 5)):
+                src, dst = rng.randrange(n_devs), rng.randrange(n_devs)
+                fa, fb = mk_pair(src, dst, rand_size())
+                batch_a.append(fa)
+                batch_b.append(fb)
+            a.start_many(batch_a)
+            b.start_many(batch_b)
+        elif op < 0.7:  # advance (sometimes exactly onto the next event)
+            nxt = a.next_event_time()
+            if nxt is not None and math.isfinite(nxt) and rng.random() < 0.4:
+                t = nxt
+            else:
+                t = a.now + rng.uniform(0.0, 2.0)
+            a.advance_to(t)
+            b.advance_to(t)
+        elif op < 0.8:  # withdraw a random live flow
+            if a.flows:
+                tag = rng.choice([f.tag for f in a.flows])
+                ab = rng.random() < 0.5
+                a.remove(a_by_tag[tag], abort=ab)
+                b.remove(b_by_tag[tag], abort=ab)
+        elif op < 0.88:  # degrade / restore a random NIC
+            key = (rng.choice([DEV_OUT, DEV_IN]), rng.randrange(n_devs))
+            a.degrade_link(key, rng.choice([0.0, 0.25, 1.0]))
+            b.degrade_link(key, a.net.link(key).degrade)
+        elif op < 0.96:  # fail + recover a device (aborts and/or reroutes)
+            dev = rng.randrange(n_devs)
+            a.fail_device(dev)
+            b.fail_device(dev)
+            if rng.random() < 0.7:
+                a.recover_device(dev)
+                b.recover_device(dev)
+        else:  # fail one spine uplink plane (reroute when planes > 1)
+            leaf = rng.choice(sorted({d.leaf for d in a.net.topo.devices}))
+            plane = rng.randrange(planes)
+            key = (LEAF_UP, leaf, plane)
+            a.fail_link(key)
+            b.fail_link(key)
+            if rng.random() < 0.7:
+                a.recover_link(key)
+                b.recover_link(key)
+        _assert_lockstep(a, b)
+        _assert_indices_coherent(a)
+        _assert_rates_match_full_solve(a)
+    a.advance_to(a.now + 1e4)
+    b.advance_to(b.now + 1e4)
+    _assert_lockstep(a, b)
+    # identical event streams, rendered bit-for-bit (repr floats)
+    assert la.lines() == lb.lines()
+    # completion callbacks fired in the same order at the same instants
+    assert [t for t, _ in zip(done_a, done_b)] == done_a  # same length
+    assert done_a == done_b
+    return a
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_incremental_engine_matches_reference_randomized(seed):
+    _run_mirrored(seed)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_incremental_engine_matches_reference_with_latency_and_planes(seed):
+    # first-byte setup latency exercises the activation calendar; two spine
+    # planes exercise load-balanced routing and failover reroutes
+    _run_mirrored(100 + seed, latency=1e-4, planes=2)
+
+
+def test_incremental_engine_matches_reference_large_sparse():
+    # many disjoint bottleneck components: the regime the incremental
+    # engine exists for — still exact
+    sim = _run_mirrored(7, n_devs=24, n_ops=60)
+    assert sim.completed_count > 0
+
+
+# ---------------------------------------------------------------------------
+# Completion-epsilon parity (live engine vs what-if estimator)
+# ---------------------------------------------------------------------------
+
+
+def test_flow_done_eps_is_the_shared_threshold():
+    assert flow_done_eps(0.0) == 1e-9
+    assert flow_done_eps(1e-10) == 1e-9  # tiny flows clamp at the floor
+    assert flow_done_eps(4e9) == 4.0  # large flows scale with size
+
+
+@pytest.mark.parametrize("nbytes", [1e-10, 1.0, 1e6, GB, 512 * GB])
+@pytest.mark.parametrize("latency", [0.0, 2.5e-4])
+def test_estimator_matches_realized_time_uncontended(nbytes, latency):
+    sim = FlowSim(_flat_cluster(4), link_latency_s=latency)
+    est = sim.estimate_transfer_time(0, 1, nbytes)
+    f = sim.start(Flow(FlowKind.COLD_START, 0, 1, nbytes), 0.0)
+    sim.advance_to(est * 4 + 10.0)
+    assert f.done
+    assert f.finished_at == pytest.approx(est, rel=1e-9, abs=1e-12)
+
+
+def test_estimator_matches_realized_time_under_contention():
+    """The boundary case the old per-step epsilon got wrong: a flow whose
+    final segment (after a competitor departs) is far smaller than its
+    total size, so a threshold relative to the *remaining* bytes disagrees
+    with the live engine's size-relative one."""
+    sim = FlowSim(_flat_cluster(4))
+    # competitor on the same ingress: both share dev 1's NIC until it lands
+    sim.start(Flow(FlowKind.KV_MIGRATION, 2, 1, 0.5 * GB), 0.0)
+    nbytes = 100 * GB
+    est = sim.estimate_transfer_time(0, 1, nbytes)
+    f = sim.start(Flow(FlowKind.COLD_START, 0, 1, nbytes), 0.0)
+    sim.advance_to(est * 2 + 10.0)
+    assert f.done
+    assert f.finished_at == pytest.approx(est, rel=1e-9)
+
+
+def test_estimator_live_parity_on_shared_sub_epsilon_boundary():
+    # a payload sitting exactly on the live done-zone boundary is "done" to
+    # both sides — the estimator must not predict a longer transfer than
+    # the engine realizes (the old divergence was exactly here)
+    sim = FlowSim(_flat_cluster(4))
+    nbytes = 1e-10  # below flow_done_eps floor -> completes on first step
+    est = sim.estimate_transfer_time(0, 1, nbytes)
+    f = sim.start(Flow(FlowKind.COLD_START, 0, 1, nbytes), 0.0)
+    sim.advance_to(1.0)
+    assert f.done
+    assert f.finished_at == pytest.approx(est, abs=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Reroute fix: latency re-charge + FLOW_REROUTED emission
+# ---------------------------------------------------------------------------
+
+
+def test_reroute_recharges_first_byte_latency_and_emits_event():
+    # cross-leaf path with 2 planes; per-link 0.25s -> 1.0s first-byte setup
+    topo = tp.make_cluster(4, 1, hosts_per_leaf=1, bw_gbps=8.0)
+    sim = FlowSim(topo, link_latency_s=0.25, spine_planes=2)
+    log = sim.subscribe(FlowEventLog())
+    f = sim.start(Flow(FlowKind.COLD_START, 0, 2, GB, tag="x"), 0.0)
+    assert f.active_at == pytest.approx(1.0)  # 4 hops x 0.25s
+    plane0 = next(l for l in f.path if l.is_spine).key
+    # plane 0 dies at t=0.5 while the first byte is still in flight: the
+    # flow fails over to plane 1 and its setup clock RESTARTS — the old
+    # engine kept the dead path's active_at (finishing impossibly early)
+    sim.fail_link(plane0, 0.5)
+    assert not f.aborted and f in sim.flows
+    assert all(not l.failed for l in f.path)
+    assert f.active_at == pytest.approx(1.5)  # 0.5 + fresh 1.0s setup
+    kinds = [e.kind for e in log.events]
+    assert kinds.index(FLOW_REROUTED) < kinds.index(LINK_FAILED)
+    (rr,) = log.iter_kinds(FLOW_REROUTED)
+    assert rr.flow is f and rr.t == pytest.approx(0.5)
+    sim.advance_to(10.0)
+    # 1.5s activate + 2s transfer (the per-plane uplink carries 0.5 GB/s)
+    assert f.finished_at == pytest.approx(3.5)
+
+
+def test_reroute_of_active_flow_does_not_recharge_latency():
+    # a flow already past its setup keeps streaming: failover changes its
+    # path, not its activation state
+    topo = tp.make_cluster(4, 1, hosts_per_leaf=1, bw_gbps=8.0)
+    sim = FlowSim(topo, link_latency_s=0.25, spine_planes=2)
+    f = sim.start(Flow(FlowKind.COLD_START, 0, 2, GB), 0.0)
+    sim.advance_to(1.5)  # active since t=1.0 at the 0.5 GB/s plane share
+    plane0 = next(l for l in f.path if l.is_spine).key
+    sim.fail_link(plane0, 1.5)
+    assert not f.aborted and f.active_at is None
+    sim.advance_to(10.0)
+    assert f.finished_at == pytest.approx(3.0)  # no second setup charge
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis property (skipped when hypothesis is absent, like test_net)
+# ---------------------------------------------------------------------------
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - optional dev dependency
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        n_devs=st.integers(4, 16),
+        latency=st.sampled_from([0.0, 1e-4]),
+        planes=st.integers(1, 2),
+    )
+    def test_incremental_matches_reference_property(seed, n_devs, latency, planes):
+        _run_mirrored(seed, n_devs=n_devs, n_ops=25, latency=latency, planes=planes)
