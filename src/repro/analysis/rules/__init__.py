@@ -1,0 +1,9 @@
+"""Rule modules self-register on import (see ``core.register``)."""
+
+from repro.analysis.rules import (  # noqa: F401
+    determinism,
+    exactfloat,
+    iteration,
+    layering,
+    reentrancy,
+)

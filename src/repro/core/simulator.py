@@ -61,6 +61,7 @@ from repro.core.topology import Role, Topology, gbps_to_bytes_per_s
 from repro.net import Flow, FlowKind, FlowSim, MulticastExecution
 from repro.obs.ledger import DEVICE_STATES, DeviceTimeLedger
 from repro.obs.trace import NULL_TRACER, NetEventBridge
+from repro.workloads.traces import request_kv_bytes
 
 # ---------------------------------------------------------------------------
 # Model serving profile
@@ -811,10 +812,6 @@ class Simulator:
             dinst.kv_tokens -= r.prompt + r.output
             self._re_prefill(r)
             return
-        # function-level import: keeps the one sizing definition in
-        # serving.traces without a module-level core -> serving edge
-        from repro.serving.traces import request_kv_bytes
-
         size = float(request_kv_bytes(r.prompt, self.prof.kv_bytes_per_token))
         self.kv_stream_bytes += size
         f = Flow(

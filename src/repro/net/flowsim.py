@@ -778,7 +778,7 @@ class FlowSim:
             for key in failed_keys or ():
                 for f in self._link_flows.get(key, ()):
                     cand[f] = None
-            for dev in dead_devs:
+            for dev in sorted(dead_devs):
                 for f in self._src_flows.get(dev, ()):
                     cand[f] = None
                 for f in self._dst_flows.get(dev, ()):

@@ -98,7 +98,7 @@ class Link:
 
     def __repr__(self) -> str:  # pragma: no cover - debug aid
         state = "FAILED" if self.failed else (
-            f"x{self.degrade:g}" if self.degrade != 1.0 else "ok"
+            f"x{self.degrade:g}" if self.degrade != 1.0 else "ok"  # simcheck: exact-float -- 1.0 is the pristine-link sentinel, set only by assignment
         )
         return f"Link({self.key}, {self.capacity:.3g} B/s, {state})"
 

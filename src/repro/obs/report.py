@@ -197,8 +197,11 @@ def run_traced_sim(
     """Run a small seeded simulation with tracing enabled; returns
     ``(tracer, sim_result)``.  The entry point CI's attribution smoke and
     the golden Chrome-trace test share."""
-    from repro.core import simulator as sim_mod
-    from repro.serving import traces
+    # lazy import: --sim is a CLI convenience that drives the simulator it
+    # normally only *observes*; library code in repro.obs must never depend
+    # on repro.core.simulator (the DAG runs the other way)
+    from repro.core import simulator as sim_mod  # simcheck: disable=layering -- CLI --sim entrypoint, not library code
+    from repro.workloads import traces
 
     systems = {
         "blitz": sim_mod.BLITZ,

@@ -1,0 +1,36 @@
+"""Workload generators — the bottom of the import DAG.
+
+Synthetic request traces (arrival processes + token-length distributions)
+are consumed by every layer above: the simulator drives itself from them,
+the serving runtimes replay them, benchmarks sweep them.  They therefore
+live *below* ``repro.core`` and ``repro.serving`` so that neither has to
+reach upward for a trace (simcheck's layering rule enforces this — this
+package may import nothing from ``repro``).
+
+``repro.serving.traces`` remains as a compatibility shim re-exporting
+everything here.
+"""
+
+from repro.workloads.traces import (
+    TRACES,
+    azure_code,
+    azure_conv,
+    burstgpt,
+    kv_volumes,
+    multi_model_mix,
+    request_kv_bytes,
+    scale_to_capacity,
+    zipf_weights,
+)
+
+__all__ = [
+    "TRACES",
+    "azure_code",
+    "azure_conv",
+    "burstgpt",
+    "kv_volumes",
+    "multi_model_mix",
+    "request_kv_bytes",
+    "scale_to_capacity",
+    "zipf_weights",
+]

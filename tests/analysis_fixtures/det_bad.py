@@ -1,0 +1,25 @@
+"""Determinism fixture (BAD): every banned pattern, one per line.
+
+Scanned with module name ``repro.net._fix_det_bad`` — never imported.
+"""
+
+import random
+import time as _time
+from datetime import datetime
+from time import perf_counter
+
+import numpy as np
+
+
+def wall_clock_reads():
+    a = _time.time()          # BAD: aliased module
+    b = perf_counter()        # BAD: from-import
+    c = datetime.now()        # BAD: datetime
+    return a, b, c
+
+
+def global_rng():
+    x = random.random()       # BAD: global random module
+    y = np.random.rand(4)     # BAD: numpy hidden global RNG
+    z = np.random.default_rng()  # BAD: seedable ctor without a seed
+    return x, y, z

@@ -1,0 +1,22 @@
+"""Determinism fixture (CLEAN): the sanctioned ways to do time and RNG.
+
+Scanned with module name ``repro.net._fix_det_clean`` — never imported.
+"""
+
+import random
+import time
+
+import numpy as np
+
+
+def seeded_rng(seed: int):
+    rng = np.random.default_rng(seed)          # OK: explicit seed
+    rng2 = np.random.default_rng(np.random.SeedSequence([seed, 1]))  # OK
+    r = random.Random(seed)                    # OK: seeded instance
+    return rng.random() + rng2.random() + r.random()  # instance methods, not global
+
+
+def pragma_escape():
+    # a deliberate wall-clock read, visibly justified:
+    t = time.perf_counter()  # simcheck: disable=determinism -- metadata only
+    return t

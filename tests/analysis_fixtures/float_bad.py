@@ -1,0 +1,43 @@
+"""Exact-float fixture (BAD): bare ==/!= touching floats.
+
+Scanned with module name ``repro.net._fix_float_bad`` — never imported.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass
+class Probe:
+    rate: float
+    count: int
+
+
+def literal_compare(x):
+    return x == 1.0                      # BAD: float literal
+
+
+def annotated_param(remaining: float, size: float):
+    return remaining == size             # BAD: both annotated float
+
+
+def division_result(a, b, c):
+    return a / b == c                    # BAD: true division is float
+
+
+def dataclass_field(p: Probe, q: Probe):
+    return p.rate != q.rate              # BAD: float-annotated field
+
+
+def math_const(x):
+    return x == math.inf                 # BAD: float constant attribute
+
+
+def float_call(x):
+    return float(x) == 3                 # BAD: float() result
+
+
+def chained(a: float, b, c):
+    return a == b == c                   # BAD: chain contains float operand

@@ -1,0 +1,40 @@
+"""Exact-float fixture (CLEAN): epsilon discipline and honest sentinels.
+
+Scanned with module name ``repro.net._fix_float_clean`` — never imported.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+def flow_done_eps(size: float) -> float:
+    return max(1e-9, 1e-12 * size)
+
+
+def epsilon_compare(remaining: float, size: float) -> bool:
+    return remaining <= flow_done_eps(size)   # OK: the sanctioned helper
+
+
+def ordering(a: float, b: float) -> bool:
+    return a < b                              # OK: ordering, not equality
+
+
+def int_compare(n: int, m: int) -> bool:
+    return n == m                             # OK: ints compare exactly
+
+
+@dataclasses.dataclass
+class Probe:
+    count: int
+
+
+def int_field(p: Probe) -> bool:
+    return p.count == 0                       # OK: int-annotated field
+
+
+def sentinel(degrade: float) -> str:
+    # a deliberate exact compare against an assigned-only sentinel:
+    if degrade != 1.0:  # simcheck: exact-float -- sentinel set by assignment
+        return "degraded"
+    return "ok"

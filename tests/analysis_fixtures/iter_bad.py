@@ -1,0 +1,52 @@
+"""Set-iteration fixture (BAD): order-dependent walks over sets.
+
+Scanned with module name ``repro.net._fix_iter_bad`` — never imported.
+"""
+
+from __future__ import annotations
+
+
+def direct_iteration(devs: set[int]) -> list[int]:
+    out = []
+    for d in devs:                      # BAD: param annotated set
+        out.append(d)
+    return out
+
+
+def inferred_from_assignment():
+    seen = set()
+    seen.add(3)
+    return [x * 2 for x in seen]        # BAD: comprehension over inferred set
+
+
+def union_of_sets(a: set[int], b: frozenset[int]):
+    for x in a | b:                     # BAD: union is still a set
+        yield x
+
+
+def dict_built_from_set(keys: set[str]):
+    d = dict.fromkeys(keys, 0)
+    for k in d:                         # BAD: dict inherits set order
+        yield k
+
+
+def passthrough(devs: set[int]):
+    for d in list(devs):                # BAD: list() preserves set order
+        yield d
+
+
+class Holder:
+    def __init__(self):
+        self.members: set[int] = set()
+
+    def walk(self):
+        return [m for m in self.members]  # BAD: self-attr set
+
+
+def literal_set():
+    for x in {3, 1, 2}:                 # BAD: set literal
+        yield x
+
+
+def float_accumulation(rates: set[float]) -> float:
+    return sum(rates)                   # BAD: float sum in hash order

@@ -1,0 +1,34 @@
+"""Set-iteration fixture (CLEAN): every sanctioned way to consume a set.
+
+Scanned with module name ``repro.net._fix_iter_clean`` — never imported.
+"""
+
+from __future__ import annotations
+
+
+def sorted_iteration(devs: set[int]) -> list[int]:
+    return [d for d in sorted(devs)]    # OK: sorted() fixes the order
+
+
+def order_insensitive(devs: set[int]):
+    return (
+        len(devs),
+        min(devs),
+        max(devs),
+        any(d > 3 for d in devs),       # OK: short-circuit reductions
+        all(d < 9 for d in devs),
+    )
+
+
+def membership(devs: set[int], x: int) -> bool:
+    return x in devs                    # OK: membership, not iteration
+
+
+def lists_are_fine(devs: list[int]):
+    for d in devs:                      # OK: lists have defined order
+        yield d
+
+
+def pragma_escape(devs: set[int]):
+    for d in devs:  # simcheck: disable=set-iteration -- feeds an order-free counter
+        yield d

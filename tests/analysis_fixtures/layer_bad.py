@@ -1,0 +1,13 @@
+"""Layering fixture (BAD): upward imports from a low layer.
+
+Scanned with module name ``repro.net._fix_layer_bad`` — NEVER imported
+(the imports below would be violations precisely because they resolve).
+"""
+
+import repro.serving                     # BAD: net must not see serving
+
+
+def lazy_violation():
+    # function-level import is still a dependency edge
+    from repro.obs import trace          # BAD: net must not see obs
+    return trace

@@ -1,0 +1,12 @@
+"""Layering fixture (CLEAN): the edges repro.net is allowed.
+
+Scanned with module name ``repro.net._fix_layer_clean`` — never imported.
+"""
+
+import dataclasses                        # OK: stdlib is unconstrained
+
+from repro.core.topology import Topology  # OK: net -> core.topology
+from repro.core import multicast          # OK: net -> core.multicast
+from repro.net import flows               # OK: intra-package
+
+__all__ = ["dataclasses", "Topology", "multicast", "flows"]

@@ -1,0 +1,50 @@
+"""Event-reentrancy fixture (BAD): a subscriber mutating the engine.
+
+Scanned with module name ``repro.net._fix_reent_bad`` — never imported.
+Mirrors the real shape: an engine with ``subscribe`` + private mutators,
+a subscriber whose callback reaches one through a helper chain.
+"""
+
+from __future__ import annotations
+
+
+class Engine:
+    def __init__(self):
+        self._subscribers = []
+
+    def subscribe(self, cb):
+        self._subscribers.append(cb)
+        return cb
+
+    def start(self, flow):
+        pass
+
+    def fail_device(self, dev):
+        self._evict_failed({dev})
+
+    def _evict_failed(self, dead):
+        pass
+
+
+class BadDirect:
+    def __init__(self, eng: Engine):
+        self.eng = eng
+        eng.subscribe(self._on_event)
+
+    def _on_event(self, event):
+        self.eng._evict_failed(set())        # BAD: engine internal
+
+
+class BadTransitive:
+    def __init__(self, eng: Engine):
+        self.eng = eng
+        eng.subscribe(self._on_event)
+
+    def _on_event(self, event):
+        self._react(event)
+
+    def _react(self, event):
+        self._teardown(event)
+
+    def _teardown(self, event):
+        self.eng.fail_device(0)              # BAD: nested capacity mutation

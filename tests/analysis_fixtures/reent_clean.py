@@ -1,0 +1,45 @@
+"""Event-reentrancy fixture (CLEAN): reacting through the sanctioned APIs.
+
+Scanned with module name ``repro.net._fix_reent_clean`` — never imported.
+"""
+
+from __future__ import annotations
+
+
+class Engine:
+    def __init__(self):
+        self._subscribers = []
+
+    def subscribe(self, cb):
+        self._subscribers.append(cb)
+        return cb
+
+    def start(self, flow):
+        pass
+
+    def remove(self, flow):
+        pass
+
+    def estimate_transfer_time(self, src, dst, nbytes):
+        return 0.0
+
+    def _evict_failed(self, dead):
+        pass
+
+
+class GoodSubscriber:
+    """Reacts inside the event, but only through the designed surface."""
+
+    def __init__(self, eng: Engine):
+        self.eng = eng
+        self.log = []
+        eng.subscribe(self._on_event)
+
+    def _on_event(self, event):
+        self.log.append(event)               # OK: observing
+        self._replan(event)
+
+    def _replan(self, event):
+        t = self.eng.estimate_transfer_time(0, 1, 1024)  # OK: read-only
+        if t > 0:
+            self.eng.start(object())         # OK: sanctioned reaction API
